@@ -1,0 +1,35 @@
+"""Paper §Classification: C(q) follows a power law — ~half the queries
+find their 1-NN in the first probed cluster; ~80% within ~tau probes."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import K, load_bench
+from repro.core import min_probes_labels, probe_trace
+
+
+def main(encoder: str = "star-like") -> dict:
+    b = load_bench(encoder)
+    q = jnp.asarray(b.corpus.queries[:2048])
+    traj, _ = probe_trace(b.index, q, b.n_probe, K)
+    labels = min_probes_labels(traj, b.exact_ids[:2048, 0], b.n_probe)
+    out = {}
+    print(f"C(q) distribution ({encoder}, N={b.n_probe})")
+    for c in (1, 2, 5, 10, 20, b.n_probe):
+        frac = float(np.mean(labels <= c))
+        out[c] = frac
+        print(f"  C(q) <= {c:3d}: {frac:6.1%}")
+    # log-log slope as a power-law proxy
+    cs = np.arange(1, 21)
+    counts = np.array([(labels == c).sum() for c in cs]) + 1e-9
+    slope = np.polyfit(np.log(cs), np.log(counts), 1)[0]
+    print(f"  log-log slope over C in [1,20]: {slope:.2f} "
+          f"(power law <=> strongly negative)")
+    out["slope"] = slope
+    return out
+
+
+if __name__ == "__main__":
+    main()

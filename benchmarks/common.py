@@ -1,0 +1,93 @@
+"""Shared benchmark substrate: three synthetic 'encoders' standing in
+for STAR / Contriever / TAS-B (DESIGN §6). Harder encoders (larger
+spread) need larger N for R*@1 >= 0.95, mirroring the paper's
+N = 80 / 140 / 190 progression. Corpora and indexes are cached on disk.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import time
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import build_index, brute_force
+from repro.core.ivf import IVFIndex
+from repro.core.training import choose_n_probe
+from repro.data.synthetic import Corpus, clustered_corpus
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                     "bench_cache")
+
+# name -> (spread, hard_frac): harder encoder == more dispersed clusters
+ENCODERS = {
+    "star-like": (0.22, 0.25),
+    "contriever-like": (0.32, 0.35),
+    "tasb-like": (0.40, 0.45),
+}
+
+N_DOCS = 60_000
+DIM = 64
+N_COMPONENTS = 512
+N_QUERIES = 3072
+K = 50
+TAU = 5
+RHO = 0.95
+
+
+@dataclass
+class Bench:
+    name: str
+    corpus: Corpus
+    index: IVFIndex
+    n_probe: int
+    exact_ids: np.ndarray      # (nq, K)
+    splits: Dict[str, slice]
+
+
+def load_bench(name: str, *, force: bool = False) -> Bench:
+    os.makedirs(CACHE, exist_ok=True)
+    path = os.path.join(CACHE, f"{name}.pkl")
+    if os.path.exists(path) and not force:
+        with open(path, "rb") as f:
+            saved = pickle.load(f)
+        corpus = Corpus(saved["docs"], saved["queries"], saved["relevant"])
+        index = build_index(corpus.docs, N_COMPONENTS, list_pad=256,
+                            n_iters=6, seed=0)
+        return Bench(name, corpus, index, saved["n_probe"],
+                     saved["exact_ids"], _splits())
+    spread, hard = ENCODERS[name]
+    seed = abs(hash(name)) % 2 ** 31
+    corpus = clustered_corpus(n_docs=N_DOCS, dim=DIM,
+                              n_components=N_COMPONENTS,
+                              n_queries=N_QUERIES, spread=spread,
+                              hard_frac=hard, seed=seed)
+    index = build_index(corpus.docs, N_COMPONENTS, list_pad=256,
+                        n_iters=6, seed=0)
+    sp = _splits()
+    n_probe = choose_n_probe(index, corpus.docs,
+                             corpus.queries[sp["valid"]], rho=RHO, k=K,
+                             n_max=N_COMPONENTS)
+    exact = np.empty((N_QUERIES, K), np.int32)
+    for s in range(0, N_QUERIES, 512):
+        _, ids = brute_force(jnp.asarray(corpus.docs),
+                             jnp.asarray(corpus.queries[s: s + 512]), K)
+        exact[s: s + 512] = np.asarray(ids)
+    with open(path, "wb") as f:
+        pickle.dump({"docs": corpus.docs, "queries": corpus.queries,
+                     "relevant": corpus.relevant, "n_probe": n_probe,
+                     "exact_ids": exact}, f)
+    return Bench(name, corpus, index, n_probe, exact, sp)
+
+
+def _splits() -> Dict[str, slice]:
+    n_test = 1024
+    n_valid = 512
+    return {"train": slice(0, N_QUERIES - n_test - n_valid),
+            "valid": slice(N_QUERIES - n_test - n_valid,
+                           N_QUERIES - n_test),
+            "test": slice(N_QUERIES - n_test, N_QUERIES)}

@@ -1,0 +1,84 @@
+"""§Roofline: three-term analysis per (arch × shape × mesh) from the
+dry-run artifacts (launch/dryrun.py must have produced
+artifacts/dryrun/*.json).
+
+    compute_s    = HLO_FLOPs_per_device / 197e12      (bf16 peak, v5e)
+    memory_s     = HLO_bytes_per_device / 819e9       (HBM)
+    collective_s = collective_bytes_per_device / 50e9 (ICI per link)
+
+cost_analysis is per-device (post-SPMD program). MODEL_FLOPS/HLO ratio
+uses global MODEL_FLOPS / (per-device HLO_FLOPs * n_devices).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+from repro.launch.hlo_analysis import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                       roofline_terms)
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                   "dryrun")
+
+
+def load_records(mesh: str = "single") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def analyse(rec: Dict) -> Dict:
+    if rec.get("status") != "ok" or "cost" not in rec:
+        return {**rec, "ok": False}
+    flops = rec["cost"]["flops"]
+    bts = rec["cost"]["bytes"]
+    coll = rec.get("collectives", {}).get("total_bytes", 0)
+    terms = roofline_terms(flops, bts, coll)
+    n_dev = rec["n_devices"]
+    mf = rec.get("model_flops_global", 0.0)
+    useful = mf / (flops * n_dev) if flops else 0.0
+    dom = terms["bottleneck"].replace("_s", "")
+    t_dom = terms[terms["bottleneck"]]
+    frac = {"compute": terms["compute_s"] / t_dom if t_dom else 0}
+    return {
+        "cell": f"{rec['arch']}:{rec['shape']}",
+        "mesh": rec["mesh"],
+        "compute_s": terms["compute_s"],
+        "memory_s": terms["memory_s"],
+        "collective_s": terms["collective_s"],
+        "bottleneck": dom,
+        "roofline_frac": terms["compute_s"] / t_dom if t_dom > 0 else 0.0,
+        "useful_flops_ratio": useful,
+        "peak_gb": rec.get("memory", {}).get("peak_gb", float("nan")),
+        "note": rec.get("note", ""),
+        "ok": True,
+    }
+
+
+def main(mesh: str = "single") -> List[Dict]:
+    rows = [analyse(r) for r in load_records(mesh)]
+    ok = [r for r in rows if r.get("ok")]
+    bad = [r for r in rows if not r.get("ok")]
+    print(f"{'cell':42s} {'comp(ms)':>9s} {'mem(ms)':>9s} {'coll(ms)':>9s} "
+          f"{'bound':>10s} {'frac':>6s} {'MF/HLO':>7s} {'peakGB':>7s}")
+    for r in sorted(ok, key=lambda r: r["cell"]):
+        print(f"{r['cell']:42s} {r['compute_s']*1e3:9.2f} "
+              f"{r['memory_s']*1e3:9.2f} {r['collective_s']*1e3:9.2f} "
+              f"{r['bottleneck']:>10s} {r['roofline_frac']:6.2f} "
+              f"{r['useful_flops_ratio']:7.2f} {r['peak_gb']:7.1f}")
+    if bad:
+        print(f"\nFAILED cells: {[b.get('arch', '?') + ':' + b.get('shape', '?') for b in bad]}")
+    out_path = os.path.join(ART, f"roofline_{mesh}.json")
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\nwrote {out_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "single")

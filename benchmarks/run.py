@@ -1,0 +1,60 @@
+"""Benchmark entry point: one section per paper table/figure + the
+beyond-paper serving table and kernel CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+--full: 3x timing reps + bigger forests in Table 2 (slower). The
+roofline table is produced separately from the dry-run artifacts via
+``python -m benchmarks.roofline`` (it needs launch/dryrun.py output).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    t0 = time.time()
+    print("=" * 72)
+    print("## Kernel micro-benchmarks (name,us_per_call,max_err)")
+    from benchmarks import kernel_bench
+    kernel_bench.main()
+
+    print("=" * 72)
+    print("## Paper §Classification: C(q) power law")
+    from benchmarks import clabel_dist
+    clabel_dist.main("star-like")
+
+    print("=" * 72)
+    print("## Paper Figure 1: phi_h saturation + Exit/Continue split")
+    from benchmarks import figure1
+    figure1.main("star-like")
+
+    print("=" * 72)
+    print("## Paper Table 2: early-exit strategies x 3 encoders")
+    from benchmarks import table2
+    table2.main(quick=not full)
+
+    print("=" * 72)
+    print("## Beyond-paper: wave-scheduler compaction")
+    from benchmarks import serving_bench
+    serving_bench.main("star-like")
+
+    print("=" * 72)
+    try:
+        from benchmarks import roofline
+        rows = roofline.load_records("single")
+        if rows:
+            print("## Roofline (single-pod dry-run artifacts)")
+            roofline.main("single")
+        else:
+            print("## Roofline: no dry-run artifacts yet "
+                  "(run python -m repro.launch.dryrun --all)")
+    except Exception as e:  # noqa: BLE001
+        print(f"## Roofline skipped: {e}")
+    print(f"\ntotal bench time: {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Paper Table 2: effectiveness/efficiency of every early-exit strategy
+on three encoder-like corpora. Prints one block per encoder with
+R*@1, R@100(->R@K), mRR@10, mean probes C, wall ms, speedup vs A-kNN95.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import K, TAU, ENCODERS, load_bench
+from repro.core import metrics, policies, search
+from repro.core.training import train_policy_models
+
+# patience settings per encoder (tuned like the paper: larger delta for
+# harder encoders)
+DELTAS = {"star-like": 4, "contriever-like": 5, "tasb-like": 6}
+PHI = 95.0
+EXIT_W = 3.0
+
+
+def run_encoder(name: str, *, quick: bool = False) -> List[Dict]:
+    b = load_bench(name)
+    sp = b.splits
+    n = b.n_probe
+    q_test = jnp.asarray(b.corpus.queries[sp["test"]])
+    exact = b.exact_ids[sp["test"]]
+    relevant = b.corpus.relevant[sp["test"]]
+    pm = train_policy_models(
+        b.index, b.corpus.docs, b.corpus.queries[sp["train"]],
+        b.corpus.queries[sp["valid"]], n_probe=n, k=K, tau=TAU,
+        exit_weight=EXIT_W, n_trees=30 if quick else 80, max_depth=5)
+    delta = DELTAS[name]
+    pols = {
+        f"A-kNN95(N={n})": policies.fixed(n, k=K, tau=TAU),
+        "Reg": policies.regression(n, pm.reg, with_intersections=False,
+                                   k=K, tau=TAU),
+        "Reg+int": policies.regression(n, pm.reg_int,
+                                       with_intersections=True, k=K,
+                                       tau=TAU),
+        f"Patience(d={delta})": policies.patience(n, delta, PHI, k=K,
+                                                  tau=TAU),
+        "Classifier": policies.classifier(n, pm.clf, k=K, tau=TAU),
+        f"Classifier(w={EXIT_W:.0f})": policies.classifier(
+            n, pm.clf_weighted, k=K, tau=TAU),
+        "+Reg+int": policies.cascade_regression(
+            n, pm.clf_weighted, pm.reg_int, k=K, tau=TAU),
+        f"+Patience(d={delta})": policies.cascade_patience(
+            n, pm.clf_weighted, delta, PHI, k=K, tau=TAU),
+    }
+    rows = []
+    base_t = None
+    for pname, pol in pols.items():
+        res = search(b.index, q_test, pol)       # compile
+        jnp.asarray(res.topk_ids).block_until_ready()
+        t0 = time.time()
+        reps = 1 if quick else 3
+        for _ in range(reps):
+            res = search(b.index, q_test, pol)
+            res.topk_ids.block_until_ready()
+        wall = (time.time() - t0) / reps * 1000
+        ids = np.asarray(res.topk_ids)
+        probes = np.asarray(res.probes)
+        summ = metrics.summarize(ids, probes, exact, relevant, wall)
+        if base_t is None:
+            base_t = wall
+        summ["Sp"] = base_t / wall
+        summ["encoder"] = name
+        summ["strategy"] = pname
+        rows.append(summ)
+    return rows
+
+
+def main(quick: bool = False) -> List[Dict]:
+    all_rows = []
+    for enc in ENCODERS:
+        rows = run_encoder(enc, quick=quick)
+        print(f"\n== {enc} (N={rows[0]['strategy']}) ==")
+        hdr = f"{'strategy':22s} {'R*@1':>6s} {'R@K':>6s} {'mRR@10':>7s} " \
+              f"{'C':>7s} {'T(ms)':>8s} {'Sp':>5s}"
+        print(hdr)
+        for r in rows:
+            print(f"{r['strategy']:22s} {r['R*@1']:6.3f} {r['R@100']:6.3f} "
+                  f"{r['mRR@10']:7.3f} {r['C']:7.1f} {r['T_ms']:8.1f} "
+                  f"{r['Sp']:5.2f}")
+        all_rows += rows
+    return all_rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

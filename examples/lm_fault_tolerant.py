@@ -1,0 +1,41 @@
+"""Fault-tolerant LM training drill: a reduced assigned-architecture LM
+trains with async checkpoints while failures are injected; the loss
+trajectory is bitwise identical to an uninterrupted run.
+
+    PYTHONPATH=src python examples/lm_fault_tolerant.py --arch dbrx-132b
+"""
+import argparse
+import shutil
+
+import numpy as np
+
+from repro.launch.train import build_trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="dbrx-132b")
+    ap.add_argument("--steps", type=int, default=30)
+    args = ap.parse_args()
+
+    base = f"/tmp/repro_ft_{args.arch}"
+    for sub in ("a", "b"):
+        shutil.rmtree(f"{base}/{sub}", ignore_errors=True)
+
+    print(f"reference run ({args.arch} reduced, {args.steps} steps)...")
+    ref = build_trainer(args.arch, smoke=True, ckpt_dir=f"{base}/a",
+                        ckpt_every=5).run(args.steps)
+    print(f"  losses: {ref.losses[0]:.4f} ... {ref.losses[-1]:.4f}")
+
+    print("chaos run: injected failures at steps 7 and 13...")
+    chaos = build_trainer(args.arch, smoke=True, ckpt_dir=f"{base}/b",
+                          ckpt_every=5).run(
+        args.steps, fail_at={7: 1, 13: 1})
+    print(f"  restarts: {chaos.restarts}")
+    np.testing.assert_allclose(ref.losses, chaos.losses, rtol=1e-6)
+    print("  loss trajectory identical after restarts — "
+          "checkpoint/restart + deterministic data replay verified.")
+
+
+if __name__ == "__main__":
+    main()

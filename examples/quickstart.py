@@ -1,0 +1,39 @@
+"""Quickstart: build an IVF index, search with early exit, compare to
+brute force.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import (brute_force, build_index, metrics, policies,
+                        search)
+from repro.data.synthetic import clustered_corpus
+
+
+def main():
+    print("generating corpus (30k docs, 64-d)...")
+    c = clustered_corpus(n_docs=30_000, dim=64, n_components=256,
+                         n_queries=512, seed=0)
+    print("building IVF index (256 clusters)...")
+    index = build_index(c.docs, 256, list_pad=256, n_iters=6)
+
+    queries = jnp.asarray(c.queries)
+    _, exact = brute_force(jnp.asarray(c.docs), queries, 10)
+    exact = np.asarray(exact)
+
+    for pol in (policies.fixed(48, k=10, tau=5),
+                policies.patience(48, delta=4, phi=95.0, k=10, tau=5)):
+        res = search(index, queries, pol)
+        ids = np.asarray(res.topk_ids)
+        probes = np.asarray(res.probes)
+        print(f"{pol.name:12s} R*@1={metrics.r_star_at_1(ids, exact[:, 0]):.3f} "
+              f"mean probes={probes.mean():5.1f} "
+              f"(max {probes.max()})")
+    print("patience reaches near-fixed recall with a fraction of the "
+          "probes — the paper's core claim.")
+
+
+if __name__ == "__main__":
+    main()

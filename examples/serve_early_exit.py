@@ -1,0 +1,62 @@
+"""Serving scenario (the paper's own kind of system): batched query
+streams against an IVF index, cascade early-exit policy, wave-scheduler
+compaction, straggler-tolerant waves.
+
+    PYTHONPATH=src python examples/serve_early_exit.py
+"""
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import brute_force, build_index, metrics, policies, search
+from repro.core.serving import WaveScheduler
+from repro.core.training import train_policy_models, choose_n_probe
+from repro.data.synthetic import clustered_corpus
+
+
+def main():
+    k, tau = 50, 5
+    print("corpus + index...")
+    c = clustered_corpus(n_docs=50_000, dim=64, n_components=384,
+                         n_queries=2048, spread=0.3, seed=1)
+    index = build_index(c.docs, 384, list_pad=256, n_iters=6)
+    train_q, valid_q, test_q = (c.queries[:768], c.queries[768:1024],
+                                c.queries[1024:])
+    n = choose_n_probe(index, c.docs, valid_q, rho=0.95, k=k, n_max=384)
+    print(f"N (R*@1>=0.95) = {n}")
+
+    print("training Exit/Continue classifier + REG (GBDT + SMOTE)...")
+    pm = train_policy_models(index, c.docs, train_q, valid_q, n_probe=n,
+                             k=k, tau=tau, exit_weight=3.0, n_trees=40,
+                             max_depth=5)
+
+    _, exact = brute_force(jnp.asarray(c.docs), jnp.asarray(test_q), k)
+    exact = np.asarray(exact)
+    print("\npolicy comparison on the test stream:")
+    for pol in (policies.fixed(n, k=k, tau=tau),
+                policies.patience(n, 4, 95.0, k=k, tau=tau),
+                policies.cascade_patience(n, pm.clf_weighted, 4, 95.0,
+                                          k=k, tau=tau)):
+        res = search(index, jnp.asarray(test_q), pol)
+        ids, probes = np.asarray(res.topk_ids), np.asarray(res.probes)
+        print(f"  {pol.name:20s} R*@1="
+              f"{metrics.r_star_at_1(ids, exact[:, 0]):.3f} "
+              f"mRR@10={metrics.mrr_at_10(ids, c.relevant[1024:]):.3f} "
+              f"C={probes.mean():5.1f}")
+
+    print("\nwave-scheduled serving (batched requests, compaction):")
+    ws = WaveScheduler(index, wave_size=128, chunk=4, k=k, n_probe=n,
+                       delta=4, phi=95.0)
+    for compact in (False, True):
+        t0 = time.time()
+        rep = ws.serve(test_q, compact=compact)
+        print(f"  compact={compact!s:5s} occupancy={rep.occupancy:.2f} "
+              f"waves={rep.waves} lane_steps/q="
+              f"{rep.lane_steps / len(test_q):5.1f} "
+              f"wall={time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Sharded, async, atomic checkpointing with elastic restore.
+
+Layout (one directory per step):
+    <root>/step_000123.tmp/   -> written, fsync'd, then renamed to
+    <root>/step_000123/       -> atomic publish (crash-safe)
+        index.json            -> pytree structure, dtypes, shapes, pspecs
+        arr_000.npy ...       -> one file per leaf (global view)
+
+Single-host containers hold the global array; on a real multi-host pod
+each host writes its addressable shards (the index format already
+carries the PartitionSpec for that). Restore re-shards onto *any* mesh
+(elastic scaling: ``repro.runtime.elastic``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def _leaf_paths(tree: Pytree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+
+
+class CheckpointManager:
+    def __init__(self, root: str, *, keep: int = 3, async_save: bool = True):
+        self.root = root
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(root, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Pytree,
+             pspecs: Optional[Pytree] = None) -> str:
+        self.wait()
+        # materialise on host *before* handing to the writer thread so
+        # the training loop can donate/overwrite device buffers
+        flat = _leaf_paths(tree)
+        host = [(k, np.asarray(v)) for k, v in flat]
+        treedef = jax.tree_util.tree_structure(tree)
+        spec_strs = None
+        if pspecs is not None:
+            spec_strs = [str(s) for _, s in _leaf_paths(
+                jax.tree.map(lambda _, s: s, tree, pspecs,
+                             is_leaf=lambda x: x is None))] \
+                if pspecs is not tree else None
+        path = os.path.join(self.root, f"step_{step:08d}")
+
+        def write():
+            tmp = path + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            index = {"step": step, "keys": [], "treedef": str(treedef)}
+            for i, (k, v) in enumerate(host):
+                fn = f"arr_{i:05d}.npy"
+                np.save(os.path.join(tmp, fn), v)
+                index["keys"].append({"key": k, "file": fn,
+                                      "dtype": str(v.dtype),
+                                      "shape": list(v.shape)})
+            if spec_strs:
+                index["pspecs"] = spec_strs
+            with open(os.path.join(tmp, "index.json"), "w") as f:
+                json.dump(index, f)
+                f.flush()
+                os.fsync(f.fileno())
+            if os.path.exists(path):
+                shutil.rmtree(path)
+            os.rename(tmp, path)            # atomic publish
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+        return path
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.root):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    out.append(int(d.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Pytree, step: Optional[int] = None,
+                shardings: Optional[Pytree] = None) -> Tuple[int, Pytree]:
+        """Load into the structure of ``template``; optionally re-shard
+        onto new device layout (elastic restore)."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        path = os.path.join(self.root, f"step_{step:08d}")
+        with open(os.path.join(path, "index.json")) as f:
+            index = json.load(f)
+        arrays = [np.load(os.path.join(path, e["file"]))
+                  for e in index["keys"]]
+        leaves, treedef = jax.tree_util.tree_flatten(template)
+        if len(leaves) != len(arrays):
+            raise ValueError(
+                f"checkpoint has {len(arrays)} leaves, template has "
+                f"{len(leaves)}")
+        if shardings is not None:
+            shard_leaves = jax.tree_util.tree_flatten(shardings)[0]
+            arrays = [jax.device_put(a, s)
+                      for a, s in zip(arrays, shard_leaves)]
+        else:
+            arrays = [jnp.asarray(a) for a in arrays]
+        return step, jax.tree_util.tree_unflatten(treedef, arrays)

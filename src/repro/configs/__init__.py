@@ -1,0 +1,4 @@
+from repro.configs.base import (ArchSpec, GNNConfig, MLAConfig, MoEConfig,
+                                RecsysConfig, RetrievalConfig, ShapeSpec,
+                                TransformerConfig, get_arch, list_archs,
+                                reduced, register, shape_for)

@@ -1,0 +1,5 @@
+"""The paper's contribution: adaptive early-exit A-kNN for dense retrieval."""
+from repro.core.ivf import (IVFIndex, SearchResult, abstract_index,
+                            brute_force, build_index, extract_features,
+                            min_probes_labels, probe_trace, search)
+from repro.core import metrics, policies

@@ -1,0 +1,51 @@
+"""Table 1 feature extraction (shared by training and the jitted search).
+
+Feature layout (order is part of the model contract):
+  [0, d)                      query vector                       (group 1)
+  [d, d+tau)                  similarity to h-th closest centroid (group 2)
+  [d+tau]                     sigma_tau(q, d_1)   max doc sim     (group 3)
+  [d+tau+1]                   sigma_tau(q, d_k)   k-th doc sim
+  [d+tau+2]                   sigma(d_1)/sigma(d_k)
+  [d+tau+3]                   sigma(d_1)/sigma(c_1)
+  [d+tau+4, d+tau+4+(tau-1))  |RS_{h-1} ∩ RS_h|/k, h=2..tau      (group 4)
+  [.., +(tau-1))              |RS_1 ∩ RS_h|/k,     h=2..tau
+REG (Li et al.) uses groups 1-3 only; REG+int and the Classifier use all.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class FeatureExtras(NamedTuple):
+    queries: jnp.ndarray        # (B, d)
+    centroid_sims: jnp.ndarray  # (B, tau)
+    topk_scores: jnp.ndarray    # (B, k) current result-set scores
+    phi_hist: jnp.ndarray       # (B, tau-1) consecutive intersections (%)
+    phi1_hist: jnp.ndarray      # (B, tau-1) intersections with RS_1 (%)
+
+
+def n_features(dim: int, tau: int, with_intersections: bool) -> int:
+    base = dim + tau + 4
+    return base + 2 * (tau - 1) if with_intersections else base
+
+
+def feature_matrix(extras: FeatureExtras, *, with_intersections: bool
+                   ) -> jnp.ndarray:
+    """(B, F) feature matrix; safe under -inf placeholder scores."""
+    q = extras.queries.astype(jnp.float32)
+    cs = extras.centroid_sims.astype(jnp.float32)
+    scores = extras.topk_scores.astype(jnp.float32)
+    finite = jnp.isfinite(scores)
+    scores = jnp.where(finite, scores, 0.0)
+    s1 = scores[:, 0]
+    sk = scores[:, -1]
+    eps = 1e-6
+    r_1k = s1 / jnp.where(jnp.abs(sk) > eps, sk, jnp.sign(sk) * eps + eps)
+    c1 = cs[:, 0]
+    r_1c = s1 / jnp.where(jnp.abs(c1) > eps, c1, jnp.sign(c1) * eps + eps)
+    cols = [q, cs, s1[:, None], sk[:, None], r_1k[:, None], r_1c[:, None]]
+    if with_intersections:
+        cols += [extras.phi_hist / 100.0, extras.phi1_hist / 100.0]
+    return jnp.concatenate(cols, axis=1)

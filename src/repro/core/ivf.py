@@ -1,0 +1,349 @@
+"""IVF two-level index + batched adaptive (early-exit) A-kNN search.
+
+TPU-native layout (DESIGN §2): document embeddings are stored
+cluster-major and every inverted list is <= ``list_pad`` rows (oversized
+k-means clusters are 2-means split at build time), so one probe ==
+streaming one contiguous ``(list_pad, d)`` tile per query + one MXU
+scoring matmul + one vectorised top-k merge. Early exit is a per-query
+*active mask* inside a ``lax.while_loop``; the loop terminates when all
+queries exited or N probes were spent.
+
+The adaptive policies (Patience / REG / Classifier / Cascade) are
+described in the paper §2 and implemented in ``repro.core.policies``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kmeans as km
+from repro.core.policies import Policy, PolicyDecision, policy_step
+from repro.core.features import FeatureExtras
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class IVFIndex:
+    """Cluster-major IVF index (all arrays device-ready)."""
+
+    centroids: jnp.ndarray        # (C, d) f32
+    docs: jnp.ndarray             # (n_pad, d) cluster-major, zero padded tail
+    doc_ids: jnp.ndarray          # (n_pad,) int32, -1 on padding
+    cluster_offsets: jnp.ndarray  # (C,) int32 row offset of each list
+    cluster_sizes: jnp.ndarray    # (C,) int32
+    list_pad: int                 # static: tile rows streamed per probe
+
+    def tree_flatten(self):
+        return ((self.centroids, self.docs, self.doc_ids,
+                 self.cluster_offsets, self.cluster_sizes), self.list_pad)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, aux)
+
+    @property
+    def n_clusters(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.centroids.shape[1]
+
+
+def build_index(docs: np.ndarray, n_clusters: int, *, list_pad: int = 256,
+                n_iters: int = 10, seed: int = 0,
+                align: int = 64) -> IVFIndex:
+    """k-means -> oversize split -> cluster-major re-layout.
+
+    ``align``: every inverted list starts at a multiple of ``align``
+    rows (gap rows id=-1), so the Pallas scan kernel can stream
+    (align, d) tiles with block-aligned scalar-prefetch offsets.
+    """
+    docs = np.asarray(docs, np.float32)
+    centroids, assign = km.kmeans(docs, n_clusters, n_iters=n_iters, seed=seed)
+    centroids, assign = km.split_oversized(docs, centroids, assign, list_pad,
+                                           seed=seed)
+    c = centroids.shape[0]
+    d = docs.shape[1]
+    sizes = np.bincount(assign, minlength=c).astype(np.int32)
+    aligned = ((sizes + align - 1) // align) * align
+    offsets = np.zeros(c, np.int32)
+    offsets[1:] = np.cumsum(aligned)[:-1].astype(np.int32)
+    total = int(aligned.sum()) + list_pad
+    sorted_docs = np.zeros((total, d), np.float32)
+    sorted_ids = np.full(total, -1, np.int32)
+    order = np.argsort(assign, kind="stable")
+    row = 0
+    pos = 0
+    srt = assign[order]
+    for cid in range(c):
+        sz = int(sizes[cid])
+        sel = order[pos: pos + sz]
+        sorted_docs[offsets[cid]: offsets[cid] + sz] = docs[sel]
+        sorted_ids[offsets[cid]: offsets[cid] + sz] = sel
+        pos += sz
+    return IVFIndex(jnp.asarray(centroids), jnp.asarray(sorted_docs),
+                    jnp.asarray(sorted_ids), jnp.asarray(offsets),
+                    jnp.asarray(sizes), list_pad)
+
+
+def abstract_index(n_docs: int, dim: int, n_clusters: int,
+                   list_pad: int) -> IVFIndex:
+    """ShapeDtypeStruct stand-in for dry-runs (no allocation)."""
+    sd = jax.ShapeDtypeStruct
+    return IVFIndex(sd((n_clusters, dim), jnp.float32),
+                    sd((n_docs + list_pad, dim), jnp.float32),
+                    sd((n_docs + list_pad,), jnp.int32),
+                    sd((n_clusters,), jnp.int32),
+                    sd((n_clusters,), jnp.int32), list_pad)
+
+
+# ---------------------------------------------------------------------------
+# Search
+# ---------------------------------------------------------------------------
+
+
+class SearchState(NamedTuple):
+    h: jnp.ndarray                # () int32 — probes done so far
+    topk_scores: jnp.ndarray      # (B, k)
+    topk_ids: jnp.ndarray         # (B, k)
+    rs1_ids: jnp.ndarray          # (B, k) result set after first probe
+    phi_hist: jnp.ndarray         # (B, tau-1) consecutive intersections (%)
+    phi1_hist: jnp.ndarray        # (B, tau-1) intersection with RS_1 (%)
+    centroid_sims: jnp.ndarray    # (B, tau)
+    patience_ctr: jnp.ndarray     # (B,) int32
+    target: jnp.ndarray           # (B,) int32 probes budget (REG/cascade)
+    active: jnp.ndarray           # (B,) bool
+    probes: jnp.ndarray           # (B,) int32 probes actually used
+
+
+class SearchResult(NamedTuple):
+    topk_scores: jnp.ndarray
+    topk_ids: jnp.ndarray
+    probes: jnp.ndarray           # (B,) int32
+    phi_hist: jnp.ndarray         # (B, tau-1) — for diagnostics/benchmarks
+
+
+def intersection_pct(a_ids: jnp.ndarray, b_ids: jnp.ndarray) -> jnp.ndarray:
+    """100*|A ∩ B|/k for padded id sets (-1 = empty slot). (B,k)x(B,k)->(B,)"""
+    k = a_ids.shape[-1]
+    eq = (a_ids[..., :, None] == b_ids[..., None, :]) & (a_ids[..., :, None] >= 0)
+    return 100.0 * jnp.sum(eq, axis=(-2, -1)).astype(jnp.float32) / k
+
+
+def _probe_tiles(index: IVFIndex, cids: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Stream each query's cluster tile: (B,L,d) docs, (B,L) ids, (B,L) mask."""
+    lp = index.list_pad
+    offs = jnp.take(index.cluster_offsets, cids)
+    sizes = jnp.take(index.cluster_sizes, cids)
+    tiles = jax.vmap(
+        lambda o: jax.lax.dynamic_slice_in_dim(index.docs, o, lp, axis=0))(offs)
+    ids = jax.vmap(
+        lambda o: jax.lax.dynamic_slice_in_dim(index.doc_ids, o, lp, axis=0))(offs)
+    mask = jnp.arange(lp)[None, :] < sizes[:, None]
+    return tiles, jnp.where(mask, ids, -1), mask
+
+
+def _merge_topk(scores: jnp.ndarray, ids: jnp.ndarray, new_scores: jnp.ndarray,
+                new_ids: jnp.ndarray, k: int, use_kernel: bool = False
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.topk_merge(scores, ids, new_scores, new_ids, k)
+    cat_s = jnp.concatenate([scores, new_scores], axis=1)
+    cat_i = jnp.concatenate([ids, new_ids], axis=1)
+    top_s, idx = jax.lax.top_k(cat_s, k)
+    top_i = jnp.take_along_axis(cat_i, idx, axis=1)
+    return top_s, top_i
+
+
+@functools.partial(
+    jax.jit, static_argnames=("use_scan_kernel", "use_topk_kernel"))
+def search(index: IVFIndex, queries: jnp.ndarray, policy: Policy, *,
+           use_scan_kernel: bool = False, use_topk_kernel: bool = False
+           ) -> SearchResult:
+    """Batched adaptive A-kNN: probe clusters in similarity order with
+    per-query early exit.
+
+    ``policy`` is a static (hashable) Policy; tree ensembles used by
+    REG/Classifier live in ``policy.reg``/``policy.clf`` as numpy-backed
+    constants baked into the jaxpr.
+    """
+    B, d = queries.shape
+    k, N, tau = policy.k, policy.n_probe, policy.tau
+    nc = index.n_clusters
+    n_rank = min(N, nc)
+
+    csims = queries @ index.centroids.T                       # (B, C)
+    rank_sims, cluster_rank = jax.lax.top_k(csims, n_rank)    # (B, N)
+
+    def probe_scores(state_h):
+        cids = jnp.take_along_axis(
+            cluster_rank, state_h[:, None], axis=1)[:, 0]
+        if use_scan_kernel:
+            from repro.kernels import ops as kops
+            lp = index.list_pad
+            offs = jnp.take(index.cluster_offsets, cids)
+            sizes = jnp.take(index.cluster_sizes, cids)
+            sc = kops.ivf_scan(queries, index.docs, offs, sizes,
+                               list_pad=lp)
+            ids = jax.vmap(lambda o: jax.lax.dynamic_slice_in_dim(
+                index.doc_ids, o, lp, axis=0))(offs)
+            mask = jnp.arange(lp)[None, :] < sizes[:, None]
+            return sc, jnp.where(mask, ids, -1)
+        tiles, ids, mask = _probe_tiles(index, cids)
+        sc = jnp.einsum("bld,bd->bl", tiles, queries)
+        return jnp.where(mask, sc, -jnp.inf), ids
+
+    init = SearchState(
+        h=jnp.zeros((), jnp.int32),
+        topk_scores=jnp.full((B, k), -jnp.inf, queries.dtype),
+        topk_ids=jnp.full((B, k), -1, jnp.int32),
+        rs1_ids=jnp.full((B, k), -1, jnp.int32),
+        phi_hist=jnp.zeros((B, max(tau - 1, 1)), jnp.float32),
+        phi1_hist=jnp.zeros((B, max(tau - 1, 1)), jnp.float32),
+        centroid_sims=rank_sims[:, :tau].astype(jnp.float32),
+        patience_ctr=jnp.zeros((B,), jnp.int32),
+        target=jnp.full((B,), N, jnp.int32),
+        active=jnp.ones((B,), bool),
+        probes=jnp.zeros((B,), jnp.int32),
+    )
+
+    def cond(s: SearchState):
+        return (s.h < n_rank) & jnp.any(s.active)
+
+    def body(s: SearchState) -> SearchState:
+        h = s.h
+        # every active query streams the tile of its h-th ranked cluster
+        probe_idx = jnp.broadcast_to(jnp.minimum(h, n_rank - 1), (B,))
+        new_scores, new_ids = probe_scores(probe_idx)
+        m_s, m_i = _merge_topk(s.topk_scores, s.topk_ids, new_scores,
+                               new_ids, k, use_topk_kernel)
+        act = s.active[:, None]
+        topk_scores = jnp.where(act, m_s, s.topk_scores)
+        topk_ids = jnp.where(act, m_i, s.topk_ids)
+
+        phi = intersection_pct(s.topk_ids, topk_ids)          # vs previous
+        rs1_ids = jnp.where((h == 0)[None, None] & act, topk_ids, s.rs1_ids)
+        phi1 = intersection_pct(rs1_ids, topk_ids)
+
+        # record stability history rows h-1 in [0, tau-2]
+        hist_col = jnp.clip(h - 1, 0, max(tau - 2, 0))
+        col_mask = (jnp.arange(s.phi_hist.shape[1]) == hist_col)[None, :]
+        in_window = (h >= 1) & (h <= tau - 1)
+        upd = col_mask & in_window & s.active[:, None]
+        phi_hist = jnp.where(upd, phi[:, None], s.phi_hist)
+        phi1_hist = jnp.where(upd, phi1[:, None], s.phi1_hist)
+
+        extras = FeatureExtras(
+            queries=queries, centroid_sims=s.centroid_sims,
+            topk_scores=topk_scores, phi_hist=phi_hist, phi1_hist=phi1_hist)
+
+        dec: PolicyDecision = policy_step(
+            policy, h=h, phi=phi, patience_ctr=s.patience_ctr,
+            target=s.target, extras=extras)
+
+        exit_now = s.active & dec.exit & (h + 1 >= policy.min_probes)
+        probes = jnp.where(s.active, h + 1, s.probes)
+        active = s.active & ~exit_now & (h + 1 < n_rank)
+        return SearchState(h + 1, topk_scores, topk_ids, rs1_ids, phi_hist,
+                           phi1_hist, s.centroid_sims, dec.patience_ctr,
+                           dec.target, active, probes)
+
+    final = jax.lax.while_loop(cond, body, init)
+    return SearchResult(final.topk_scores, final.topk_ids, final.probes,
+                        final.phi_hist)
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "k", "with_intersections"))
+def extract_features(index: IVFIndex, queries: jnp.ndarray, *, tau: int,
+                     k: int, with_intersections: bool = True) -> jnp.ndarray:
+    """Run exactly ``tau`` probes and build the Table-1 feature matrix.
+
+    This is the same code path the jitted search uses at h == tau, so
+    offline (training) and online (serving) features match bit-for-bit.
+    """
+    from repro.core.features import FeatureExtras as FE, feature_matrix
+    B = queries.shape[0]
+    csims = queries @ index.centroids.T
+    rank_sims, cluster_rank = jax.lax.top_k(csims, min(tau, index.n_clusters))
+
+    def step(carry, h):
+        scores, ids, rs1, phi_h, phi1_h = carry
+        tiles, tids, mask = _probe_tiles(index, cluster_rank[:, h])
+        sc = jnp.where(mask, jnp.einsum("bld,bd->bl", tiles, queries),
+                       -jnp.inf)
+        ns, ni = _merge_topk(scores, ids, sc, tids, k)
+        phi = intersection_pct(ids, ni)
+        rs1 = jnp.where(h == 0, ni, rs1)
+        phi1 = intersection_pct(rs1, ni)
+        col = jnp.clip(h - 1, 0, max(tau - 2, 0))
+        colm = (jnp.arange(max(tau - 1, 1)) == col)[None, :] & (h >= 1)
+        phi_h = jnp.where(colm, phi[:, None], phi_h)
+        phi1_h = jnp.where(colm, phi1[:, None], phi1_h)
+        return (ns, ni, rs1, phi_h, phi1_h), None
+
+    init = (jnp.full((B, k), -jnp.inf, queries.dtype),
+            jnp.full((B, k), -1, jnp.int32),
+            jnp.full((B, k), -1, jnp.int32),
+            jnp.zeros((B, max(tau - 1, 1)), jnp.float32),
+            jnp.zeros((B, max(tau - 1, 1)), jnp.float32))
+    (scores, ids, rs1, phi_h, phi1_h), _ = jax.lax.scan(
+        step, init, jnp.arange(min(tau, index.n_clusters)))
+    extras = FE(queries=queries, centroid_sims=rank_sims.astype(jnp.float32),
+                topk_scores=scores, phi_hist=phi_h, phi1_hist=phi1_h)
+    return feature_matrix(extras, with_intersections=with_intersections)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def brute_force(docs: jnp.ndarray, queries: jnp.ndarray, k: int
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact kNN oracle (id space = row index)."""
+    sims = queries @ docs.T
+    s, i = jax.lax.top_k(sims, k)
+    return s, i.astype(jnp.int32)
+
+
+def probe_trace(index: IVFIndex, queries: jnp.ndarray, n_probe: int, k: int
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Reference (non-exiting) scan returning the full top-k trajectory:
+    ids after every probe h=1..N. Used for C(q) labels, Figure 1 and
+    policy oracles. Returns (ids_traj (N,B,k), phi (N-1,B))."""
+    B = queries.shape[0]
+    csims = queries @ index.centroids.T
+    _, cluster_rank = jax.lax.top_k(csims, min(n_probe, index.n_clusters))
+
+    def step(carry, h):
+        scores, ids = carry
+        cids = cluster_rank[:, h]
+        tiles, tids, mask = _probe_tiles(index, cids)
+        sc = jnp.einsum("bld,bd->bl", tiles, queries)
+        sc = jnp.where(mask, sc, -jnp.inf)
+        ns, ni = _merge_topk(scores, ids, sc, tids, k)
+        return (ns, ni), ni
+
+    init = (jnp.full((B, k), -jnp.inf, queries.dtype),
+            jnp.full((B, k), -1, jnp.int32))
+    _, traj = jax.lax.scan(step, init,
+                           jnp.arange(min(n_probe, index.n_clusters)))
+    traj = np.asarray(traj)
+    phi = np.stack([np.asarray(intersection_pct(jnp.asarray(traj[h - 1]),
+                                                jnp.asarray(traj[h])))
+                    for h in range(1, traj.shape[0])])
+    return traj, phi
+
+
+def min_probes_labels(traj_ids: np.ndarray, exact_top1: np.ndarray,
+                      n_probe: int) -> np.ndarray:
+    """C(q): minimal h such that RS_h contains the exact 1-NN (else N)."""
+    n, b, _ = traj_ids.shape
+    found = (traj_ids == exact_top1[None, :, None]).any(-1)  # (N, B)
+    any_found = found.any(0)
+    first = np.argmax(found, axis=0) + 1
+    return np.where(any_found, first, n_probe).astype(np.int32)

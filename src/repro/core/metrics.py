@@ -1,0 +1,43 @@
+"""Effectiveness metrics from the paper: R*@1, R*@k, R@k, mRR@10."""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+
+def r_star_at_1(result_ids: np.ndarray, exact_top1: np.ndarray) -> float:
+    """Fraction of queries whose top-1 equals the exact 1-NN."""
+    return float(np.mean(result_ids[:, 0] == exact_top1))
+
+
+def r_star_at_k(result_ids: np.ndarray, exact_ids: np.ndarray) -> float:
+    """Mean overlap between the approximate and exact top-k sets."""
+    k = exact_ids.shape[1]
+    inter = (result_ids[:, :, None] == exact_ids[:, None, :]).any(-1)
+    return float(np.mean(inter.sum(1) / k))
+
+def recall_at_k(result_ids: np.ndarray, relevant: np.ndarray) -> float:
+    """R@k against the single labelled relevant doc per query."""
+    return float(np.mean((result_ids == relevant[:, None]).any(1)))
+
+
+def mrr_at_10(result_ids: np.ndarray, relevant: np.ndarray) -> float:
+    top10 = result_ids[:, :10]
+    hit = top10 == relevant[:, None]
+    rank = np.argmax(hit, 1) + 1
+    rr = np.where(hit.any(1), 1.0 / rank, 0.0)
+    return float(np.mean(rr))
+
+
+def summarize(result_ids: np.ndarray, probes: np.ndarray,
+              exact_ids: np.ndarray, relevant: np.ndarray,
+              wall_ms: float = float("nan")) -> Dict[str, float]:
+    return {
+        "R*@1": r_star_at_1(result_ids, exact_ids[:, 0]),
+        "R*@k": r_star_at_k(result_ids, exact_ids),
+        "R@100": recall_at_k(result_ids, relevant),
+        "mRR@10": mrr_at_10(result_ids, relevant),
+        "C": float(np.mean(probes)),
+        "T_ms": wall_ms,
+    }

@@ -1,0 +1,171 @@
+"""Early-exit policies (paper §2) as jit-composable state machines.
+
+One :class:`Policy` pytree configures the adaptive search:
+
+  fixed(N)                     A-kNN_95 baseline — no early exit
+  patience(delta, phi)         the paper's unsupervised heuristic
+  regression(reg)              REG  [Li et al., SIGMOD'20]  (groups 1-3)
+  regression(reg, +int)        REG+int (adds stability features)
+  classifier(clf)              Exit/Continue at tau, survivors run to N
+  cascade(clf, patience|reg)   paper §2 "Cascade Approach"
+
+Static layout flags live in pytree aux-data; thresholds and tree arrays
+are leaves so one compiled search serves retuned policies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.features import FeatureExtras, feature_matrix
+from repro.trees.jax_infer import TreeEnsemble, predict_margin
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Policy:
+    # --- static (aux) ---
+    k: int = 100
+    n_probe: int = 80
+    tau: int = 10
+    min_probes: int = 1
+    use_patience: bool = False
+    use_reg: bool = False
+    reg_with_intersections: bool = False
+    use_classifier: bool = False
+    name: str = "fixed"
+    # --- leaves ---
+    delta: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.asarray(7, jnp.int32))
+    phi: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.asarray(95.0, jnp.float32))
+    clf_threshold: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.asarray(0.5, jnp.float32))
+    reg: Optional[TreeEnsemble] = None
+    clf: Optional[TreeEnsemble] = None
+
+    def tree_flatten(self):
+        leaves = (self.delta, self.phi, self.clf_threshold, self.reg, self.clf)
+        aux = (self.k, self.n_probe, self.tau, self.min_probes,
+               self.use_patience, self.use_reg, self.reg_with_intersections,
+               self.use_classifier, self.name)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        (k, n_probe, tau, min_probes, up, ur, ri, uc, name) = aux
+        delta, phi, clf_threshold, reg, clf = leaves
+        return cls(k=k, n_probe=n_probe, tau=tau, min_probes=min_probes,
+                   use_patience=up, use_reg=ur, reg_with_intersections=ri,
+                   use_classifier=uc, name=name, delta=delta, phi=phi,
+                   clf_threshold=clf_threshold, reg=reg, clf=clf)
+
+
+# -- constructors -----------------------------------------------------------
+
+def fixed(n_probe: int, k: int = 100, tau: int = 10) -> Policy:
+    return Policy(k=k, n_probe=n_probe, tau=tau, name=f"aknn{n_probe}")
+
+
+def patience(n_probe: int, delta: int, phi: float = 95.0, k: int = 100,
+             tau: int = 10, min_probes: int = 1) -> Policy:
+    return Policy(k=k, n_probe=n_probe, tau=tau, use_patience=True,
+                  min_probes=min_probes, delta=jnp.asarray(delta, jnp.int32),
+                  phi=jnp.asarray(phi, jnp.float32),
+                  name=f"patience{delta}")
+
+
+def regression(n_probe: int, reg: TreeEnsemble, *, with_intersections: bool,
+               k: int = 100, tau: int = 10) -> Policy:
+    return Policy(k=k, n_probe=n_probe, tau=tau, use_reg=True,
+                  reg_with_intersections=with_intersections, reg=reg,
+                  min_probes=tau,
+                  name="reg+int" if with_intersections else "reg")
+
+
+def classifier(n_probe: int, clf: TreeEnsemble, *, threshold: float = 0.5,
+               k: int = 100, tau: int = 10) -> Policy:
+    return Policy(k=k, n_probe=n_probe, tau=tau, use_classifier=True,
+                  clf=clf, min_probes=tau,
+                  clf_threshold=jnp.asarray(threshold, jnp.float32),
+                  name="classifier")
+
+
+def cascade_patience(n_probe: int, clf: TreeEnsemble, delta: int,
+                     phi: float = 95.0, *, threshold: float = 0.5,
+                     k: int = 100, tau: int = 10) -> Policy:
+    return Policy(k=k, n_probe=n_probe, tau=tau, use_classifier=True,
+                  use_patience=True, clf=clf, min_probes=tau,
+                  delta=jnp.asarray(delta, jnp.int32),
+                  phi=jnp.asarray(phi, jnp.float32),
+                  clf_threshold=jnp.asarray(threshold, jnp.float32),
+                  name=f"cascade+patience{delta}")
+
+
+def cascade_regression(n_probe: int, clf: TreeEnsemble, reg: TreeEnsemble,
+                       *, threshold: float = 0.5, k: int = 100,
+                       tau: int = 10) -> Policy:
+    return Policy(k=k, n_probe=n_probe, tau=tau, use_classifier=True,
+                  use_reg=True, reg_with_intersections=True, clf=clf,
+                  reg=reg, min_probes=tau,
+                  clf_threshold=jnp.asarray(threshold, jnp.float32),
+                  name="cascade+reg")
+
+
+# -- step -------------------------------------------------------------------
+
+
+class PolicyDecision(NamedTuple):
+    exit: jnp.ndarray          # (B,) bool — policy wants to stop this query
+    patience_ctr: jnp.ndarray  # (B,) int32
+    target: jnp.ndarray        # (B,) int32 probe budget
+
+
+def policy_step(policy: Policy, *, h: jnp.ndarray, phi: jnp.ndarray,
+                patience_ctr: jnp.ndarray, target: jnp.ndarray,
+                extras: FeatureExtras) -> PolicyDecision:
+    """Evaluate exit logic after probe ``h`` (0-based; probes done = h+1)."""
+    b = phi.shape[0]
+    probes_done = h + 1
+
+    # ---- patience ----
+    if policy.use_patience:
+        ctr = jnp.where((h >= 1) & (phi >= policy.phi), patience_ctr + 1, 0)
+        exit_pat = ctr >= policy.delta
+    else:
+        ctr = patience_ctr
+        exit_pat = jnp.zeros((b,), bool)
+
+    # ---- learned stages fire once, when probes_done == tau ----
+    exit_clf = jnp.zeros((b,), bool)
+    if policy.use_classifier or policy.use_reg:
+        def at_tau(operand):
+            extras_, target_ = operand
+            exit_c = jnp.zeros((b,), bool)
+            tgt = target_
+            if policy.use_classifier:
+                fm = feature_matrix(extras_, with_intersections=True)
+                p_exit = jax.nn.sigmoid(predict_margin(policy.clf, fm))
+                exit_c = p_exit >= policy.clf_threshold
+            if policy.use_reg:
+                fm = feature_matrix(
+                    extras_,
+                    with_intersections=policy.reg_with_intersections)
+                pred = predict_margin(policy.reg, fm)
+                tgt = jnp.clip(jnp.round(pred), policy.tau,
+                               policy.n_probe).astype(jnp.int32)
+            return exit_c, tgt
+
+        def skip(operand):
+            _, target_ = operand
+            return jnp.zeros((b,), bool), target_
+
+        exit_clf, target = jax.lax.cond(
+            probes_done == policy.tau, at_tau, skip, (extras, target))
+
+    exit_tgt = probes_done >= target if policy.use_reg else \
+        jnp.zeros((b,), bool)
+    return PolicyDecision(exit_pat | exit_clf | exit_tgt, ctr, target)

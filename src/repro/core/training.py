@@ -1,0 +1,116 @@
+"""Offline training of the learned early-exit stages (REG / Classifier).
+
+Mirrors the paper's methodology: split queries into train/valid/test,
+compute golden labels C(q) (min probes to reach the exact 1-NN, else N),
+extract Table-1 features after tau probes, train LightGBM-class forests
+(our GBDT), with SMOTE + Exit-class weighting for the classifier.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ivf
+from repro.trees.gbdt import GBDT, Forest
+from repro.trees.jax_infer import TreeEnsemble, from_numpy_forest
+from repro.trees.smote import smote
+
+
+@dataclass
+class PolicyModels:
+    reg: TreeEnsemble            # groups 1-3 (Li et al.)
+    reg_int: TreeEnsemble        # all features (REG+int)
+    clf: TreeEnsemble            # unweighted classifier
+    clf_weighted: TreeEnsemble   # Exit-class weight w
+    labels_train: np.ndarray     # C(q) on the train split (diagnostics)
+    n_probe: int
+    tau: int
+
+
+def golden_labels(index: ivf.IVFIndex, queries: np.ndarray, docs: np.ndarray,
+                  n_probe: int, k: int, block: int = 512) -> np.ndarray:
+    """C(q) for every query (blocked to bound memory)."""
+    out = np.empty(queries.shape[0], np.int32)
+    for s in range(0, queries.shape[0], block):
+        e = min(s + block, queries.shape[0])
+        q = jnp.asarray(queries[s:e])
+        _, top1 = ivf.brute_force(jnp.asarray(docs), q, 1)
+        traj, _ = ivf.probe_trace(index, q, n_probe, k)
+        out[s:e] = ivf.min_probes_labels(traj, np.asarray(top1)[:, 0],
+                                         n_probe)
+    return out
+
+
+def features_blocked(index: ivf.IVFIndex, queries: np.ndarray, *, tau: int,
+                     k: int, block: int = 1024) -> np.ndarray:
+    outs = []
+    for s in range(0, queries.shape[0], block):
+        q = jnp.asarray(queries[s: s + block])
+        outs.append(np.asarray(ivf.extract_features(
+            index, q, tau=tau, k=k, with_intersections=True)))
+    return np.concatenate(outs, 0)
+
+
+def train_policy_models(index: ivf.IVFIndex, docs: np.ndarray,
+                        train_q: np.ndarray, valid_q: np.ndarray, *,
+                        n_probe: int, k: int = 100, tau: int = 10,
+                        exit_weight: float = 3.0, n_trees: int = 100,
+                        max_depth: int = 6, seed: int = 0,
+                        n_base_features: Optional[int] = None
+                        ) -> PolicyModels:
+    dim = index.dim
+    nb = n_base_features if n_base_features is not None else dim + tau + 4
+
+    y_tr = golden_labels(index, train_q, docs, n_probe, k)
+    y_va = golden_labels(index, valid_q, docs, n_probe, k)
+    x_tr = features_blocked(index, train_q, tau=tau, k=k)
+    x_va = features_blocked(index, valid_q, tau=tau, k=k)
+
+    # --- REG (groups 1-3) & REG+int (all features) ---
+    reg_model = GBDT("l2", n_trees=n_trees, max_depth=max_depth, seed=seed)
+    f_reg = reg_model.fit(x_tr[:, :nb], y_tr.astype(np.float64),
+                          eval_set=(x_va[:, :nb], y_va.astype(np.float64)))
+    f_reg_int = reg_model.fit(x_tr, y_tr.astype(np.float64),
+                              eval_set=(x_va, y_va.astype(np.float64)))
+
+    # --- Classifier: Exit iff C(q) <= tau; SMOTE on the minority class,
+    # then instance weight w on the Exit class (paper: penalise F-Exits) ---
+    c_tr = (y_tr <= tau).astype(np.float64)   # Exit = 1
+    c_va = (y_va <= tau).astype(np.float64)
+    xs, cs = smote(x_tr, c_tr, seed=seed)
+    clf_model = GBDT("logistic", n_trees=n_trees, max_depth=max_depth,
+                     seed=seed)
+    f_clf = clf_model.fit(xs, cs, eval_set=(x_va, c_va))
+    w = np.where(cs == 1.0, exit_weight, 1.0)
+    f_clf_w = clf_model.fit(xs, cs, sample_weight=w, eval_set=(x_va, c_va))
+
+    return PolicyModels(
+        reg=from_numpy_forest(f_reg, max_depth),
+        reg_int=from_numpy_forest(f_reg_int, max_depth),
+        clf=from_numpy_forest(f_clf, max_depth),
+        clf_weighted=from_numpy_forest(f_clf_w, max_depth),
+        labels_train=y_tr, n_probe=n_probe, tau=tau)
+
+
+def choose_n_probe(index: ivf.IVFIndex, docs: np.ndarray,
+                   queries: np.ndarray, *, rho: float = 0.95, k: int = 100,
+                   n_max: int = 256, block: int = 512) -> int:
+    """Paper §2: minimum N with R*@1 >= rho on a tuning query set."""
+    hits = np.zeros(n_max, np.int64)
+    total = 0
+    for s in range(0, queries.shape[0], block):
+        e = min(s + block, queries.shape[0])
+        q = jnp.asarray(queries[s:e])
+        _, top1 = ivf.brute_force(jnp.asarray(docs), q, 1)
+        traj, _ = ivf.probe_trace(index, q, n_max, k)
+        found = (traj == np.asarray(top1)[None, :, :1]).any(-1)  # (N, b)
+        hit_at = np.cumsum(found, 0) > 0                          # (N, b)
+        hits += hit_at.sum(1)
+        total += e - s
+    recall = hits / total
+    ok = np.nonzero(recall >= rho)[0]
+    return int(ok[0]) + 1 if ok.size else n_max

@@ -1,0 +1,121 @@
+"""Synthetic data generators (DESIGN §6 — simulated data gates).
+
+``clustered_corpus`` replaces the MS-MARCO + {STAR, Contriever, TAS-B}
+embedding collections: an anisotropic Gaussian mixture with power-law
+component sizes. Queries mix *easy* (noisy copies of docs — the ~50% of
+queries whose 1-NN sits in the first probed cluster) and *hard*
+(interpolations between components — the long power-law tail). The
+"encoder" knob ``spread`` emulates harder encoders (Contriever/TAS-B
+need larger N in the paper).
+
+Also: LM token streams, zipf click logs (recsys), random graphs (GNN).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class Corpus:
+    docs: np.ndarray       # (n_docs, dim) f32, L2-normalised
+    queries: np.ndarray    # (n_q, dim)
+    relevant: np.ndarray   # (n_q,) int32 — "human label" doc per query
+
+
+def clustered_corpus(n_docs: int = 100_000, dim: int = 128,
+                     n_components: int = 512, n_queries: int = 4096,
+                     *, spread: float = 0.25, hard_frac: float = 0.35,
+                     seed: int = 0) -> Corpus:
+    rng = np.random.default_rng(seed)
+    # power-law component sizes (Zipf s=1.1)
+    w = 1.0 / np.arange(1, n_components + 1) ** 1.1
+    w /= w.sum()
+    sizes = rng.multinomial(n_docs, w)
+    centers = rng.normal(0, 1, (n_components, dim)).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    scales = (0.5 + rng.random(n_components)) * spread
+    docs = np.empty((n_docs, dim), np.float32)
+    comp_of = np.empty(n_docs, np.int32)
+    pos = 0
+    for c, s in enumerate(sizes):
+        if s == 0:
+            continue
+        pts = centers[c] + rng.normal(0, scales[c], (s, dim))
+        docs[pos: pos + s] = pts
+        comp_of[pos: pos + s] = c
+        pos += s
+    docs /= np.linalg.norm(docs, axis=1, keepdims=True)
+
+    n_hard = int(n_queries * hard_frac)
+    n_easy = n_queries - n_hard
+    # easy: perturbed docs (1-NN almost surely in the home cluster)
+    src = rng.integers(0, n_docs, n_easy)
+    easy = docs[src] + rng.normal(0, 0.15 * spread, (n_easy, dim))
+    # hard: interpolations between two components + noise
+    c1 = rng.integers(0, n_components, n_hard)
+    c2 = rng.integers(0, n_components, n_hard)
+    t = rng.random((n_hard, 1)).astype(np.float32)
+    hard = centers[c1] * t + centers[c2] * (1 - t) + \
+        rng.normal(0, spread, (n_hard, dim))
+    queries = np.concatenate([easy, hard]).astype(np.float32)
+    queries /= np.linalg.norm(queries, axis=1, keepdims=True)
+    perm = rng.permutation(n_queries)
+    queries = queries[perm]
+    # "relevant" doc = exact 1-NN of a noisy variant (proxy for qrels)
+    relevant = np.empty(n_queries, np.int32)
+    block = 256
+    for s in range(0, n_queries, block):
+        e = min(s + block, n_queries)
+        sims = queries[s:e] @ docs.T
+        relevant[s:e] = np.argmax(sims, 1)
+    return Corpus(docs, queries, relevant)
+
+
+# ---------------------------------------------------------------------------
+# LM / recsys / graph generators
+# ---------------------------------------------------------------------------
+
+
+def token_stream(n_tokens: int, vocab: int, seed: int = 0,
+                 zipf_s: float = 1.2) -> np.ndarray:
+    """Zipf-distributed token ids (realistic embedding-gather skew)."""
+    rng = np.random.default_rng(seed)
+    ranks = rng.zipf(zipf_s, n_tokens)
+    return np.minimum(ranks - 1, vocab - 1).astype(np.int32)
+
+
+def click_log(batch: int, n_dense: int, n_sparse: int, rows_per_field: int,
+              seed: int = 0) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    dense = rng.normal(0, 1, (batch, max(n_dense, 1))).astype(np.float32)
+    ranks = rng.zipf(1.2, (batch, n_sparse))
+    sparse = np.minimum(ranks - 1, rows_per_field - 1).astype(np.int32)
+    # click prob depends on a random linear model over fields (learnable)
+    logits = 0.1 * dense.sum(1) + 0.01 * (sparse % 17).sum(1) - 1.0
+    y = (rng.random(batch) < 1 / (1 + np.exp(-logits))).astype(np.float32)
+    if n_dense == 0:
+        dense = np.zeros((batch, 0), np.float32)
+    return {"dense": dense, "sparse": sparse, "label": y}
+
+
+def random_graph(n_nodes: int, n_edges: int, d_feat: int, n_classes: int,
+                 seed: int = 0, power_law: bool = True
+                 ) -> Dict[str, np.ndarray]:
+    """Random (power-law degree) graph with community-correlated labels."""
+    rng = np.random.default_rng(seed)
+    if power_law:
+        p = 1.0 / np.arange(1, n_nodes + 1) ** 0.8
+        p /= p.sum()
+        src = rng.choice(n_nodes, n_edges, p=p).astype(np.int32)
+    else:
+        src = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    dst = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    comm = rng.integers(0, n_classes, n_nodes)
+    feats = rng.normal(0, 1, (n_nodes, d_feat)).astype(np.float32)
+    feats[:, : n_classes] += 2.0 * np.eye(n_classes, dtype=np.float32)[comm]
+    labels = comm.astype(np.int32)
+    return {"edge_src": src, "edge_dst": dst, "feat": feats,
+            "label": labels}

@@ -1,0 +1,97 @@
+"""Activation-sharding context: the launcher announces the mesh layout;
+model code places with_sharding_constraint on activations only when a
+mesh is active (unit tests on 1 device see plain jnp).
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import threading
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh):
+    prev = getattr(_STATE, "mesh", None)
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev
+
+
+def current_mesh():
+    return getattr(_STATE, "mesh", None)
+
+
+def dp_axes() -> Optional[Tuple[str, ...]]:
+    m = current_mesh()
+    if m is None:
+        return None
+    return tuple(a for a in m.axis_names if a in ("pod", "data")) or None
+
+
+def model_axis() -> Optional[str]:
+    m = current_mesh()
+    if m is None or "model" not in m.axis_names:
+        return None
+    return "model"
+
+
+def model_size() -> int:
+    m = current_mesh()
+    return m.shape["model"] if m is not None and "model" in m.axis_names \
+        else 1
+
+
+def act(x, spec_template: Tuple, *, bf16_cotangent: bool = False
+        ) -> "jax.Array":
+    """Constrain activation sharding. Template entries:
+    'dp' -> data axes, 'model' -> model axis, None -> unsharded.
+    A 'dp' on a size-1 dim degrades to None (long-context decode B=1).
+    No-op when no mesh is active.
+
+    bf16_cotangent: cast the backward cotangent to bf16 before it
+    crosses this (resharding) boundary — f32 cotangent all-gathers of
+    the sequence-parallel residual otherwise dominate the collective
+    roofline term (§Perf, qwen train hillclimb)."""
+    m = current_mesh()
+    if m is None:
+        return x
+    resolved = []
+    for i, e in enumerate(spec_template):
+        if e == "dp":
+            axes = dp_axes()
+            resolved.append(axes if axes and x.shape[i] > 1 else None)
+        elif e == "model":
+            resolved.append(model_axis())
+        else:
+            resolved.append(None)
+    spec = P(*resolved)
+    if not bf16_cotangent:
+        return jax.lax.with_sharding_constraint(x, spec)
+    return _act_bf16_ct(x, spec)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _act_bf16_ct(x, spec):
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _act_bf16_ct_fwd(x, spec):
+    return jax.lax.with_sharding_constraint(x, spec), None
+
+
+def _act_bf16_ct_bwd(spec, _, ct):
+    ct = ct.astype(jnp.bfloat16)
+    ct = jax.lax.with_sharding_constraint(ct, spec)
+    return (ct,)
+
+
+_act_bf16_ct.defvjp(_act_bf16_ct_fwd, _act_bf16_ct_bwd)

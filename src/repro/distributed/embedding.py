@@ -1,0 +1,65 @@
+"""Model-parallel EmbeddingBag via shard_map (DESIGN §5).
+
+Tables are row-sharded over `model`; every device resolves the ids that
+fall in its row range and a psum combines — the table is never
+all-gathered (the failure mode of naive pjit gathers on 10^8-row
+tables). Ids arrive replicated across `model` and sharded over the DP
+axes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def make_sharded_lookup(mesh: Mesh, rows_total: int, *,
+                        model_axis: str = "model",
+                        dp_axes: Tuple[str, ...] = ("data",)):
+    """Returns lookup(table, flat_ids) -> (B, F, D) embeddings.
+
+    table: (rows_total, D) sharded P(model, None)
+    flat_ids: (B, F) combined-table ids, sharded P(dp, None)
+    """
+    n_shards = 1
+    for a in model_axis if isinstance(model_axis, tuple) else (model_axis,):
+        n_shards *= mesh.shape[a]
+    rows_local = (rows_total + n_shards - 1) // n_shards
+
+    def local(table_shard: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+        i = jax.lax.axis_index(model_axis)
+        r0 = i * rows_local
+        loc = ids - r0
+        ok = (loc >= 0) & (loc < table_shard.shape[0])
+        emb = jnp.take(table_shard, jnp.clip(loc, 0, table_shard.shape[0]
+                                             - 1), axis=0)
+        emb = emb * ok[..., None].astype(emb.dtype)
+        return jax.lax.psum(emb, model_axis)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(model_axis, None), P(dp_axes, None)),
+        out_specs=P(dp_axes, None, None))
+
+
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray,
+                  offsets: jnp.ndarray, *, combine: str = "sum"
+                  ) -> jnp.ndarray:
+    """Single-host EmbeddingBag oracle: ragged multi-hot bags.
+
+    ids: (nnz,) row ids; offsets: (B+1,) bag boundaries -> (B, D).
+    (The taxonomy-mandated take + segment_sum construction.)
+    """
+    nnz = ids.shape[0]
+    b = offsets.shape[0] - 1
+    seg = jnp.searchsorted(offsets[1:], jnp.arange(nnz), side="right")
+    emb = jnp.take(table, ids, axis=0)
+    out = jax.ops.segment_sum(emb, seg, num_segments=b)
+    if combine == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones((nnz,), table.dtype), seg,
+                                  num_segments=b)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out

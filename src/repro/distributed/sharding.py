@@ -1,0 +1,180 @@
+"""Parameter / activation PartitionSpec rules per model family.
+
+Mesh axes (launch/mesh.py): optional "pod" (cross-pod DP), "data"
+(FSDP), "model" (TP/EP). LM params are TP-sharded on head/ff/vocab dims
+over `model` and FSDP-sharded on the complementary dim over `data`
+(ZeRO-3-alike — optimizer moments inherit the same specs). Dims that do
+not divide evenly are padded by the SPMD partitioner (DESIGN §4:
+qwen 40 heads @ TP16, etc.).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """All data-parallel axes present in the mesh ("pod" included)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def fit(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop sharding on dims the shape does not divide evenly —
+    program *inputs* must shard exactly (XLA pads only intermediates).
+    E.g. minicpm's vocab 73448 is not divisible by model=16, so its
+    embedding falls back to replicated-on-vocab."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, e in zip(shape, entries):
+        out.append(e if e is not None and dim % _axis_size(mesh, e) == 0
+                   else None)
+    return P(*out)
+
+
+def fit_tree(specs, abstract_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s, leaf: fit(s, leaf.shape, mesh), specs, abstract_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# --- LM ---------------------------------------------------------------------
+
+_LM_RULES = [
+    # (path regex, spec builder given leaf ndim)
+    (r"\['embed'\]$",                lambda n: P("model", "data")),
+    (r"\['out'\]\['w'\]$",           lambda n: P("data", "model")),
+    (r"\['out'\]\['b'\]$",           lambda n: P("model")),
+    (r"\['attn'\]\['w[qkv]'\]\['w'\]$", lambda n: P("data", "model")),
+    (r"\['attn'\]\['w[qkv]'\]\['b'\]$", lambda n: P("model")),
+    (r"\['attn'\]\['wo'\]\['w'\]$",  lambda n: P("model", "data")),
+    (r"\['attn'\]\['wo'\]\['b'\]$",  lambda n: P(None)),
+    # MLA
+    (r"\['wq_a'\]\['w'\]$",          lambda n: P("data", None)),
+    (r"\['wq_b'\]\['w'\]$",          lambda n: P(None, "model")),
+    (r"\['wkv_a'\]\['w'\]$",         lambda n: P("data", None)),
+    (r"\['wk_b'\]\['w'\]$",          lambda n: P(None, "model")),
+    (r"\['wv_b'\]\['w'\]$",          lambda n: P(None, "model")),
+    # dense MLP
+    (r"\['mlp'\]\['w[ig]'\]\['w'\]$", lambda n: P("data", "model")),
+    (r"\['mlp'\]\['wo'\]\['w'\]$",   lambda n: P("model", "data")),
+    # MoE
+    (r"\['moe'\]\['router'\]\['w'\]$", lambda n: P(None, None)),
+    # expert weights: EP on E + FSDP on d/ff; the MoE shard_map body
+    # all-gathers them on use (ZeRO-3) — see models/moe.py
+    (r"\['moe'\]\['w[ig]'\]$",       lambda n: P("model", "data", None)),
+    (r"\['moe'\]\['wo'\]$",          lambda n: P("model", "data", None)),
+    (r"\['moe'\]\['shared'\]\['w[ig]'\]\['w'\]$",
+     lambda n: P(None, "model")),
+    (r"\['moe'\]\['shared'\]\['wo'\]\['w'\]$",
+     lambda n: P("model", None)),
+]
+
+
+def lm_param_specs(abstract_params: Pytree, mesh: Optional[Mesh] = None
+                   ) -> Pytree:
+    def spec_for(keypath, leaf):
+        ks = jax.tree_util.keystr(keypath)
+        stacked = "['layers']" in ks
+        for pat, mk in _LM_RULES:
+            if re.search(pat, ks):
+                s = mk(leaf.ndim)
+                if stacked:
+                    s = P(None, *s)   # leading scan-layer dim
+                if mesh is not None:
+                    s = fit(s, leaf.shape, mesh)
+                return s
+        return P()                    # norms, small leftovers: replicate
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract_params)
+
+
+def lm_cache_specs(cache, mesh: Mesh, *, seq_sharded: bool) -> Pytree:
+    """KV caches (L, B, S, KV, hd): batch over DP; KV heads over model
+    when they divide evenly (deepseek kv=16 @ TP16), else the sequence
+    dim carries the model sharding (qwen kv=40, dbrx kv=8, starcoder2
+    kv=2 — S is always a power of two). long-context (B=1) shards S
+    over every axis."""
+    dp = dp_axes(mesh)
+    ms = mesh.shape["model"]
+    all_axes = tuple(mesh.axis_names)
+
+    def spec_for(leaf):
+        if leaf.ndim == 5:      # gqa k/v (L,B,S,KV,hd)
+            b, kv = leaf.shape[1], leaf.shape[3]
+            if b == 1:
+                return fit(P(None, None, all_axes, None, None),
+                           leaf.shape, mesh)
+            if kv % ms == 0:
+                return fit(P(None, dp, None, "model", None),
+                           leaf.shape, mesh)
+            return fit(P(None, dp, "model", None, None), leaf.shape, mesh)
+        if leaf.ndim == 4:      # int8 scales (L,B,S,KV)
+            b, kv = leaf.shape[1], leaf.shape[3]
+            if b == 1:
+                return fit(P(None, None, all_axes, None), leaf.shape,
+                           mesh)
+            if kv % ms == 0:
+                return fit(P(None, dp, None, "model"), leaf.shape, mesh)
+            return fit(P(None, dp, "model", None), leaf.shape, mesh)
+        if leaf.ndim == 3:      # mla (L,B,S,r)
+            b = leaf.shape[1]
+            if b == 1:
+                return fit(P(None, None, all_axes, None), leaf.shape,
+                           mesh)
+            return fit(P(None, dp, "model", None), leaf.shape, mesh)
+        return P()
+
+    return jax.tree.map(spec_for, cache)
+
+
+# --- GNN ---------------------------------------------------------------------
+
+def gnn_param_specs(abstract_params: Pytree) -> Pytree:
+    return jax.tree.map(lambda _: P(), abstract_params)
+
+
+def gnn_input_specs(mesh: Mesh) -> Any:
+    """Edges sharded over every mesh axis; node arrays replicated."""
+    all_axes = tuple(mesh.axis_names)
+    from repro.models.gnn import Graph
+    return Graph(feat=P(), edge_src=P(all_axes), edge_dst=P(all_axes),
+                 label=P(), edge_mask=None)
+
+
+# --- RecSys -------------------------------------------------------------------
+
+def recsys_param_specs(abstract_params: Pytree,
+                       mesh: Optional[Mesh] = None) -> Pytree:
+    def spec_for(keypath, leaf):
+        ks = jax.tree_util.keystr(keypath)
+        s = P()
+        if re.search(r"\['(table|linear_table)'\]$", ks):
+            s = P("model", None)         # row-sharded embedding tables
+        elif re.search(r"\['l\d+'\]\['w'\]$", ks) and leaf.ndim == 2 \
+                and leaf.shape[0] >= 512:
+            s = P("data", "model")       # big tower/mlp matrices
+        return fit(s, leaf.shape, mesh) if mesh is not None else s
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract_params)
+
+
+def named(mesh: Mesh, specs: Pytree) -> Pytree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,43 @@
+"""EmbeddingBag gather-reduce kernel (FBGEMM-TBE pattern in Pallas).
+
+RecSys hot path: ids (B, F) -> sum of F table rows per bag. Grid is
+(B, F); the row BlockSpec's index_map reads the prefetched id table, so
+each grid step DMA's exactly one (1, D) row HBM->VMEM; the output bag
+block is revisited across the F steps and accumulated in place
+(initialised on the first visit). No one-hot matmul, no (B, F, D)
+intermediate in HBM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, row_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += row_ref[...].astype(o_ref.dtype)
+
+
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray, *,
+                  interpret: bool = False) -> jnp.ndarray:
+    """table (R, D); ids (B, F) int32 -> (B, D) sum-combined bags."""
+    b, f = ids.shape
+    r, d = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, f),
+        in_specs=[pl.BlockSpec((1, d), lambda i, j, ids: (ids[i, j], 0))],
+        out_specs=pl.BlockSpec((1, d), lambda i, j, ids: (i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), table)

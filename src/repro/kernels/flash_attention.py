@@ -1,0 +1,94 @@
+"""Causal flash attention (forward) — Pallas TPU kernel.
+
+Online-softmax over streamed KV blocks (FlashAttention, arXiv:2205.14135
+adapted to the TPU memory hierarchy): grid (BH, n_q, n_k); the (blk_q,
+hd) query tile and running (m, l, acc) stats live in VMEM scratch; each
+grid step DMA's one (blk_k, hd) KV tile HBM->VMEM and updates the stats;
+the output tile is written once on the last KV step. Causal blocks above
+the diagonal are skipped via pl.when (no MXU work issued).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, blk_q: int, blk_k: int, causal: bool, scale: float):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = (j * blk_k <= i * blk_q + blk_q - 1) if causal else True
+
+    @pl.when(run if causal else True)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                 # (blk_q, hd)
+        k = k_ref[0].astype(jnp.float32)                 # (blk_k, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = i * blk_q + jax.lax.broadcasted_iota(
+                jnp.int32, (blk_q, blk_k), 0)
+            kpos = j * blk_k + jax.lax.broadcasted_iota(
+                jnp.int32, (blk_q, blk_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+            jnp.dot(p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]) \
+            .astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, blk_q: int = 128,
+                    blk_k: int = 128, interpret: bool = False
+                    ) -> jnp.ndarray:
+    """q,k,v: (BH, S, hd) -> (BH, S, hd)."""
+    bh, s, hd = q.shape
+    blk_q = min(blk_q, s)
+    blk_k = min(blk_k, s)
+    assert s % blk_q == 0 and s % blk_k == 0
+    grid = (bh, s // blk_q, s // blk_k)
+    scale = 1.0 / np.sqrt(hd)
+    kern = functools.partial(_kernel, blk_q=blk_q, blk_k=blk_k,
+                             causal=causal, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,52 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) every kernel runs in interpret mode — the
+kernel body executes eagerly in Python for correctness validation
+against ref.py. On a TPU backend the same call sites compile the real
+Mosaic kernels.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import embedding_bag as _eb
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ivf_scan as _scan
+from repro.kernels import topk_merge as _tm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "blk_q", "blk_k"))
+def flash_attention(q, k, v, *, causal: bool = True, blk_q: int = 128,
+                    blk_k: int = 128):
+    return _fa.flash_attention(q, k, v, causal=causal, blk_q=blk_q,
+                               blk_k=blk_k, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("list_pad", "blk_l"))
+def ivf_scan(queries, docs, offsets, sizes, *, list_pad: int,
+             blk_l: int = 64):
+    """Fused cluster-tile scoring; -inf outside each true list size."""
+    raw = _scan.ivf_scan(queries, docs, offsets, list_pad=list_pad,
+                         blk_l=blk_l, interpret=_interpret())
+    mask = jnp.arange(list_pad)[None, :] < sizes[:, None]
+    return jnp.where(mask, raw, -jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "blk_b"))
+def topk_merge(scores, ids, new_scores, new_ids, k: int, *,
+               blk_b: int = 8) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    return _tm.topk_merge(scores, ids, new_scores, new_ids, k,
+                          blk_b=blk_b, interpret=_interpret())
+
+
+@jax.jit
+def embedding_bag(table, ids):
+    return _eb.embedding_bag(table, ids, interpret=_interpret())

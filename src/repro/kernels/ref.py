@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True) -> jnp.ndarray:
+    """q,k,v: (BH, S, hd) -> (BH, S, hd). Plain masked softmax."""
+    s = q.shape[1]
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)) \
+        .astype(q.dtype)
+
+
+def ivf_scan_ref(queries: jnp.ndarray, docs: jnp.ndarray,
+                 offsets: jnp.ndarray, sizes: jnp.ndarray,
+                 list_pad: int) -> jnp.ndarray:
+    """(B,d) x cluster-major (n,d) rows [offset, offset+size) ->
+    (B, list_pad) scores, -inf outside the list."""
+    tiles = jax.vmap(lambda o: jax.lax.dynamic_slice_in_dim(
+        docs, o, list_pad, 0))(offsets)
+    sc = jnp.einsum("bld,bd->bl", tiles.astype(jnp.float32),
+                    queries.astype(jnp.float32))
+    mask = jnp.arange(list_pad)[None] < sizes[:, None]
+    return jnp.where(mask, sc, -jnp.inf)
+
+
+def topk_merge_ref(scores: jnp.ndarray, ids: jnp.ndarray,
+                   new_scores: jnp.ndarray, new_ids: jnp.ndarray,
+                   k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    cat_s = jnp.concatenate([scores, new_scores], 1)
+    cat_i = jnp.concatenate([ids, new_ids], 1)
+    ts, idx = jax.lax.top_k(cat_s, k)
+    return ts, jnp.take_along_axis(cat_i, idx, 1)
+
+
+def embedding_bag_ref(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """table (R,D), ids (B,F) -> (B,D) sum-bag."""
+    return jnp.take(table, ids, axis=0).sum(axis=1)

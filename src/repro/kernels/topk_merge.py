@@ -1,0 +1,80 @@
+"""Top-k merge kernel: bitonic sort network over (running-k ++ new-L).
+
+The A-kNN inner loop merges each query's running top-k with list_pad
+fresh scores every probe. The network is static (built from XOR-partner
+permutations), so it lowers to lane shuffles on the VPU — no
+data-dependent control flow. Scores ride with their doc ids through the
+compare-exchange.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -jnp.inf
+
+
+def _bitonic_desc(s: jnp.ndarray, i: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort rows of s (B, M) descending, carrying i. M = power of 2."""
+    m = s.shape[1]
+    idx = jnp.arange(m)
+    stages = int(np.log2(m))
+    for st in range(1, stages + 1):
+        kk = 1 << st
+        for jj in (1 << p for p in range(st - 1, -1, -1)):
+            partner = idx ^ jj
+            ps = jnp.take(s, partner, axis=1)
+            pi = jnp.take(i, partner, axis=1)
+            up = (idx & kk) == 0            # descending blocks
+            is_lo = (idx & jj) == 0
+            # lane keeps max if (descending and lower) or (asc and upper)
+            keep_max = jnp.where(up, is_lo, ~is_lo)[None, :]
+            take_p = jnp.where(keep_max, ps > s, ps < s)
+            s = jnp.where(take_p, ps, s)
+            i = jnp.where(take_p, pi, i)
+    return s, i
+
+
+def _kernel(s_ref, i_ref, ns_ref, ni_ref, os_ref, oi_ref, *, k: int,
+            m_pad: int):
+    s = jnp.concatenate([s_ref[...], ns_ref[...]], axis=1)
+    i = jnp.concatenate([i_ref[...], ni_ref[...]], axis=1)
+    pad = m_pad - s.shape[1]
+    if pad:
+        s = jnp.pad(s, ((0, 0), (0, pad)), constant_values=-1e30)
+        i = jnp.pad(i, ((0, 0), (0, pad)), constant_values=-1)
+    s = jnp.where(jnp.isfinite(s), s, -1e30)
+    ss, si = _bitonic_desc(s, i)
+    os_ref[...] = ss[:, :k]
+    oi_ref[...] = si[:, :k]
+
+
+def topk_merge(scores: jnp.ndarray, ids: jnp.ndarray,
+               new_scores: jnp.ndarray, new_ids: jnp.ndarray, k: int,
+               *, blk_b: int = 8, interpret: bool = False
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b = scores.shape[0]
+    total = scores.shape[1] + new_scores.shape[1]
+    m_pad = 1 << int(np.ceil(np.log2(total)))
+    blk_b = min(blk_b, b)
+    if b % blk_b:
+        blk_b = 1
+    kern = functools.partial(_kernel, k=k, m_pad=m_pad)
+    grid = (b // blk_b,)
+    specs = lambda w: pl.BlockSpec((blk_b, w), lambda bi: (bi, 0))
+    out_s, out_i = pl.pallas_call(
+        kern, grid=grid,
+        in_specs=[specs(scores.shape[1]), specs(ids.shape[1]),
+                  specs(new_scores.shape[1]), specs(new_ids.shape[1])],
+        out_specs=[specs(k), specs(k)],
+        out_shape=[jax.ShapeDtypeStruct((b, k), scores.dtype),
+                   jax.ShapeDtypeStruct((b, k), ids.dtype)],
+        interpret=interpret,
+    )(scores, ids, new_scores, new_ids)
+    return out_s, out_i

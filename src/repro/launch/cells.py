@@ -1,0 +1,553 @@
+"""Dry-run cell construction: one Cell per (arch × shape × mesh).
+
+A Cell carries the jit-able fn, abstract args (ShapeDtypeStructs — no
+allocation), in/out shardings, and optional *cost variants*: unrolled
+L=1 / L=2 programs whose compiled cost difference gives exact per-layer
+FLOPs/bytes/collectives (XLA counts while bodies once; DESIGN §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import base as cb
+from repro.configs.base import get_arch, shape_for
+from repro.distributed import sharding as shd
+from repro.models import gnn as gnn_lib
+from repro.models import recsys as rec_lib
+from repro.models import transformer as tf
+from repro.optim.optimizers import adamw, warmup_cosine
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclass
+class Cell:
+    name: str
+    fn: Callable
+    args: Tuple
+    in_shardings: Any
+    out_shardings: Any = None
+    donate_argnums: Tuple[int, ...] = ()
+    cost_variants: Optional[Dict] = None   # {"l1": (fn,args,in_sh), "l2":…,
+                                           #  "n_scale": layers-1 multiplier}
+    model_flops: float = 0.0               # global MODEL_FLOPS (6ND etc.)
+    note: str = ""
+
+
+def _dp(mesh: Mesh) -> Tuple[str, ...]:
+    return shd.dp_axes(mesh)
+
+
+def _named(mesh, tree):
+    return shd.named(mesh, tree)
+
+
+def _make_opt():
+    return adamw(warmup_cosine(3e-4, 100, 10_000))
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def _microbatches(cfg, mesh, batch_size, seq) -> int:
+    """Gradient-accumulation depth: keep per-shard microbatch around
+    <=16k tokens (activation memory), power of two, divides B/dp."""
+    dp_size = 1
+    for a in _dp(mesh):
+        dp_size *= mesh.shape[a]
+    rows_per_shard = max(batch_size // dp_size, 1)
+    m = 1
+    while (rows_per_shard // m) * seq > 16384 and m < rows_per_shard \
+            and (rows_per_shard // m) % 2 == 0:
+        m *= 2
+    return m
+
+
+def _lm_train_pieces(cfg, mesh, batch_size, seq, *, unroll=False,
+                     microbatches=1):
+    dp = _dp(mesh)
+    params_abs = tf.abstract_params(cfg)
+    pspecs = shd.lm_param_specs(params_abs, mesh)
+    opt = _make_opt()
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    opt_specs = {"mu": pspecs, "nu": pspecs}
+    batch_abs = {"tokens": SDS((batch_size, seq), jnp.int32),
+                 "labels": SDS((batch_size, seq), jnp.int32)}
+    batch_specs = {"tokens": P(dp, None), "labels": P(dp, None)}
+    m = microbatches
+    loss_grad = jax.value_and_grad(
+        functools.partial(tf.loss_fn, cfg, unroll=unroll), has_aux=True)
+
+    def train_step(params, opt_state, step_idx, batch):
+        if m == 1:
+            (loss, _), grads = loss_grad(params, batch)
+        else:
+            # gradient accumulation over m microbatches (activation
+            # memory /m; grads accumulate fp32 in param sharding)
+            mbs = jax.tree.map(
+                lambda a: a.reshape(m, a.shape[0] // m, *a.shape[1:]),
+                batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def mb_step(carry, mb):
+                loss_sum, gacc = carry
+                (loss, _), g = loss_grad(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (loss_sum + loss, gacc), None
+
+            (loss, grads), _ = jax.lax.scan(
+                mb_step, (jnp.zeros((), jnp.float32), g0), mbs)
+            loss = loss / m
+            grads = jax.tree.map(lambda g_: g_ / m, grads)
+        new_p, new_s = opt.update(grads, opt_state, params, step_idx)
+        return new_p, new_s, loss
+
+    in_sh = (_named(mesh, pspecs), _named(mesh, opt_specs),
+             NamedSharding(mesh, P()), _named(mesh, batch_specs))
+    out_sh = (_named(mesh, pspecs), _named(mesh, opt_specs),
+              NamedSharding(mesh, P()))
+    args = (params_abs, opt_abs, SDS((), jnp.int32), batch_abs)
+    return train_step, args, in_sh, out_sh
+
+
+def _lm_train_cell(spec, shape, mesh) -> Cell:
+    cfg = spec.model
+    bs, seq = shape.dims["global_batch"], shape.dims["seq_len"]
+    m = _microbatches(cfg, mesh, bs, seq)
+    fn, args, in_sh, out_sh = _lm_train_pieces(cfg, mesh, bs, seq,
+                                               microbatches=m)
+    nd = cfg.moe.first_k_dense if cfg.moe else 0
+    cfg1 = dataclasses.replace(cfg, n_layers=nd + 1)
+    cfg2 = dataclasses.replace(cfg, n_layers=nd + 2)
+    # cost variants run un-microbatched (same FLOPs, no inner while so
+    # the L1/L2 delta stays exact) and layer-unrolled
+    v1 = _lm_train_pieces(cfg1, mesh, bs, seq, unroll=True)
+    v2 = _lm_train_pieces(cfg2, mesh, bs, seq, unroll=True)
+    tokens = bs * seq
+    return Cell(
+        name=f"{spec.arch_id}:{shape.name}",
+        fn=fn, args=args, in_shardings=in_sh, out_shardings=out_sh,
+        donate_argnums=(0, 1),
+        cost_variants={"l1": v1[:3], "l2": v2[:3],
+                       "n_scale": cfg.n_layers - nd - 1},
+        model_flops=6.0 * cfg.active_param_count() * tokens,
+        note=f"train_step = fwd+bwd+AdamW; remat/layer; "
+             f"{m} microbatches")
+
+
+def _lm_prefill_pieces(cfg, mesh, bs, seq, *, unroll=False):
+    dp = _dp(mesh)
+    params_abs = tf.abstract_params(cfg)
+    pspecs = shd.lm_param_specs(params_abs, mesh)
+    tokens_abs = SDS((bs, seq), jnp.int32)
+
+    def fn(params, tokens):
+        return tf.prefill(cfg, params, tokens, unroll=unroll)
+
+    in_sh = (_named(mesh, pspecs), NamedSharding(mesh, P(dp, None)))
+    return fn, (params_abs, tokens_abs), in_sh
+
+
+def _lm_prefill_cell(spec, shape, mesh) -> Cell:
+    cfg = spec.model
+    bs, seq = shape.dims["global_batch"], shape.dims["seq_len"]
+    fn, args, in_sh = _lm_prefill_pieces(cfg, mesh, bs, seq)
+    nd = cfg.moe.first_k_dense if cfg.moe else 0
+    cfg1 = dataclasses.replace(cfg, n_layers=nd + 1)
+    cfg2 = dataclasses.replace(cfg, n_layers=nd + 2)
+    return Cell(
+        name=f"{spec.arch_id}:{shape.name}",
+        fn=fn, args=args, in_shardings=in_sh,
+        cost_variants={
+            "l1": _lm_prefill_pieces(cfg1, mesh, bs, seq, unroll=True),
+            "l2": _lm_prefill_pieces(cfg2, mesh, bs, seq, unroll=True),
+            "n_scale": cfg.n_layers - nd - 1},
+        model_flops=2.0 * cfg.active_param_count() * bs * seq,
+        note="prefill: chunked-causal attention, returns KV cache")
+
+
+def _lm_decode_pieces(cfg, mesh, bs, seq, *, long: bool, unroll=False):
+    dp = _dp(mesh)
+    params_abs = tf.abstract_params(cfg)
+    pspecs = shd.lm_param_specs(params_abs, mesh)
+    cache_abs = tf.abstract_cache(cfg, bs, seq)
+    cache_specs = shd.lm_cache_specs(cache_abs, mesh, seq_sharded=long)
+    tok_abs = SDS((bs, 1), jnp.int32)
+    tok_spec = P(None, None) if bs == 1 else P(dp, None)
+
+    def fn(params, cache, token, pos):
+        return tf.decode_step(cfg, params, cache, token, pos,
+                              unroll=unroll)
+
+    in_sh = (_named(mesh, pspecs), _named(mesh, cache_specs),
+             NamedSharding(mesh, tok_spec), NamedSharding(mesh, P()))
+    out_sh = (None, _named(mesh, cache_specs))
+    args = (params_abs, cache_abs, tok_abs, SDS((), jnp.int32))
+    return fn, args, in_sh, out_sh
+
+
+def _lm_decode_cell(spec, shape, mesh) -> Cell:
+    cfg = spec.model
+    bs, seq = shape.dims["global_batch"], shape.dims["seq_len"]
+    long = shape.kind == "long_decode"
+    fn, args, in_sh, out_sh = _lm_decode_pieces(cfg, mesh, bs, seq,
+                                                long=long)
+    nd = cfg.moe.first_k_dense if cfg.moe else 0
+    cfg1 = dataclasses.replace(cfg, n_layers=nd + 1)
+    cfg2 = dataclasses.replace(cfg, n_layers=nd + 2)
+    v1 = _lm_decode_pieces(cfg1, mesh, bs, seq, long=long, unroll=True)
+    v2 = _lm_decode_pieces(cfg2, mesh, bs, seq, long=long, unroll=True)
+    return Cell(
+        name=f"{spec.arch_id}:{shape.name}",
+        fn=fn, args=args, in_shardings=in_sh, out_shardings=out_sh,
+        donate_argnums=(1,),
+        cost_variants={"l1": v1[:3], "l2": v2[:3],
+                       "n_scale": cfg.n_layers - nd - 1},
+        model_flops=2.0 * cfg.active_param_count() * bs,
+        note=("long-context decode: KV cache sequence-sharded over all "
+              "mesh axes" if long else
+              f"decode: KV cache {cfg.kv_cache_dtype}, heads over model"))
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+
+def _gnn_train_step(cfg, opt):
+    def step(params, opt_state, step_idx, graph):
+        (loss, _), grads = jax.value_and_grad(
+            functools.partial(gnn_lib.loss_fn, cfg), has_aux=True
+        )(params, graph)
+        new_p, new_s = opt.update(grads, opt_state, params, step_idx)
+        return new_p, new_s, loss
+    return step
+
+
+def _gnn_cell(spec, shape, mesh) -> Cell:
+    cfg0 = spec.model
+    dims = shape.dims
+    d_feat = dims.get("d_feat", cfg0.d_in)
+    cfg = dataclasses.replace(cfg0, d_in=d_feat)
+    all_axes = tuple(mesh.axis_names)
+    params_abs = jax.eval_shape(
+        functools.partial(gnn_lib.init_params, cfg), jax.random.PRNGKey(0))
+    pspecs = shd.gnn_param_specs(params_abs)
+    opt = _make_opt()
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    opt_specs = {"mu": pspecs, "nu": pspecs}
+
+    if shape.kind == "minibatch":
+        from repro.data.graph_sampler import block_shapes
+        fanouts = (dims["fanout0"], dims["fanout1"])
+        bn = dims["batch_nodes"]
+        shapes = block_shapes(bn, fanouts)
+        blocks_abs = [{"edge_src": SDS((e,), jnp.int32),
+                       "edge_dst": SDS((e,), jnp.int32),
+                       "edge_mask": SDS((e,), jnp.bool_)}
+                      for (e, n, o) in shapes]
+        n_outs = tuple(o for (_, _, o) in shapes)
+        feats_abs = SDS((shapes[-1][1], d_feat), jnp.float32)
+        labels_abs = SDS((bn,), jnp.int32)
+
+        def step(params, opt_state, step_idx, feats, blocks, labels):
+            (loss, _), grads = jax.value_and_grad(
+                functools.partial(gnn_lib.loss_blocks, cfg,
+                                  n_outs=n_outs), has_aux=True
+            )(params, feats, blocks, labels)
+            new_p, new_s = opt.update(grads, opt_state, params, step_idx)
+            return new_p, new_s, loss
+
+        bspec = [{k: P(all_axes) for k in b} for b in blocks_abs]
+        in_sh = (_named(mesh, pspecs), _named(mesh, opt_specs),
+                 NamedSharding(mesh, P()), NamedSharding(mesh, P()),
+                 _named(mesh, bspec), NamedSharding(mesh, P()))
+        args = (params_abs, opt_abs, SDS((), jnp.int32), feats_abs,
+                blocks_abs, labels_abs)
+        note = f"sampled minibatch, fanout {fanouts}"
+    else:
+        if shape.kind == "batched_graphs":
+            bsz = dims["batch"]
+            n = dims["n_nodes"] * bsz
+            e = dims["n_edges"] * bsz
+            note = f"disjoint union of {bsz} molecule graphs"
+        else:
+            n, e = dims["n_nodes"], dims["n_edges"]
+            note = "full-graph training; edges sharded over all axes"
+        e = ((e + 1023) // 1024) * 1024   # pad: inputs must shard evenly
+        graph_abs = gnn_lib.Graph(
+            feat=SDS((n, d_feat), jnp.float32),
+            edge_src=SDS((e,), jnp.int32),
+            edge_dst=SDS((e,), jnp.int32),
+            label=SDS((n,), jnp.int32), edge_mask=None)
+        gspecs = gnn_lib.Graph(feat=P(), edge_src=P(all_axes),
+                               edge_dst=P(all_axes), label=P(),
+                               edge_mask=None)
+        step = _gnn_train_step(cfg, opt)
+        in_sh = (_named(mesh, pspecs), _named(mesh, opt_specs),
+                 NamedSharding(mesh, P()), _named(mesh, gspecs))
+        args = (params_abs, opt_abs, SDS((), jnp.int32), graph_abs)
+
+    # GAT flops ~ 3*(edges*heads*d_hidden)*2 per layer fwd, x3 for bwd
+    e_total = dims.get("n_edges", 0) * dims.get("batch", 1)
+    mf = 6.0 * 3 * e_total * cfg.n_heads * cfg.d_hidden
+    return Cell(name=f"{spec.arch_id}:{shape.name}", fn=step, args=args,
+                in_shardings=in_sh, donate_argnums=(0, 1),
+                model_flops=mf, note=note)
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+
+def _recsys_cell(spec, shape, mesh) -> Cell:
+    cfg = spec.model
+    dp = _dp(mesh)
+    dims = shape.dims
+    params_abs = jax.eval_shape(
+        functools.partial(rec_lib.init_params, cfg), jax.random.PRNGKey(0))
+    pspecs = shd.recsys_param_specs(params_abs, mesh)
+
+    if shape.kind == "retrieval":
+        nc = dims["n_candidates"]
+        all_axes = tuple(mesh.axis_names)
+        if cfg.tower_mlp:
+            # two-tower: dot the query against the candidate store
+            d = cfg.tower_mlp[-1]
+            q_abs = SDS((max(dims["batch"], 1), d), jnp.float32)
+            cand_abs = SDS((nc, d), jnp.float32)
+
+            def fn(q, cand):
+                return rec_lib.score_candidates(q, cand, k=100)
+
+            cand_spec = shd.fit(P(all_axes, None), (nc, d), mesh)
+            if cand_spec == P(None, None):   # 1e6 % 256 != 0: fall back
+                cand_spec = shd.fit(P(_dp(mesh), None), (nc, d), mesh)
+            in_sh = (NamedSharding(mesh, P(None, None)),
+                     NamedSharding(mesh, cand_spec))
+            return Cell(name=f"{spec.arch_id}:{shape.name}", fn=fn,
+                        args=(q_abs, cand_abs), in_shardings=in_sh,
+                        model_flops=2.0 * nc * d,
+                        note="brute-force candidate scoring (baseline); "
+                             "see the :retrieval_cand_ivf cell for the "
+                             "paper's early-exit path")
+        # CTR models: pointwise-score 1M candidate items for one user
+        # context, return the top-100
+        cand_batch = {"dense": SDS((nc, max(cfg.n_dense, 0)),
+                                   jnp.float32),
+                      "sparse": SDS((nc, cfg.n_sparse), jnp.int32),
+                      "label": SDS((nc,), jnp.float32)}
+        cspec = shd.fit(P(_dp(mesh), None), (nc, cfg.n_sparse), mesh)
+        cand_specs = {"dense": cspec, "sparse": cspec,
+                      "label": P(cspec[0])}
+
+        def fn(params, batch):
+            logits = rec_lib.serve_logits(cfg, params, batch)
+            return jax.lax.top_k(logits, 100)
+
+        in_sh = (_named(mesh, pspecs), _named(mesh, cand_specs))
+        return Cell(name=f"{spec.arch_id}:{shape.name}", fn=fn,
+                    args=(params_abs, cand_batch), in_shardings=in_sh,
+                    model_flops=_recsys_flops(cfg, nc),
+                    note="CTR pointwise scoring of 1M candidates + "
+                         "top-100")
+
+    bsz = dims["batch"]
+    batch_abs = {"dense": SDS((bsz, max(cfg.n_dense, 0)), jnp.float32),
+                 "sparse": SDS((bsz, cfg.n_sparse), jnp.int32),
+                 "label": SDS((bsz,), jnp.float32)}
+    batch_specs = {"dense": P(dp, None), "sparse": P(dp, None),
+                   "label": P(dp)}
+
+    if shape.kind == "train_batch":
+        opt = _make_opt()
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        opt_specs = {"mu": pspecs, "nu": pspecs}
+
+        def step(params, opt_state, step_idx, batch):
+            (loss, _), grads = jax.value_and_grad(
+                functools.partial(rec_lib.loss_fn, cfg), has_aux=True
+            )(params, batch)
+            new_p, new_s = opt.update(grads, opt_state, params, step_idx)
+            return new_p, new_s, loss
+
+        in_sh = (_named(mesh, pspecs), _named(mesh, opt_specs),
+                 NamedSharding(mesh, P()), _named(mesh, batch_specs))
+        args = (params_abs, opt_abs, SDS((), jnp.int32), batch_abs)
+        return Cell(name=f"{spec.arch_id}:{shape.name}", fn=step,
+                    args=args, in_shardings=in_sh, donate_argnums=(0, 1),
+                    model_flops=_recsys_flops(cfg, bsz) * 3,
+                    note="train_step; embedding tables row-sharded over "
+                         "model")
+
+    def serve(params, batch):
+        return rec_lib.serve_logits(cfg, params, batch)
+
+    in_sh = (_named(mesh, pspecs), _named(mesh, batch_specs))
+    return Cell(name=f"{spec.arch_id}:{shape.name}", fn=serve,
+                args=(params_abs, batch_abs), in_shardings=in_sh,
+                model_flops=_recsys_flops(cfg, bsz),
+                note=f"pointwise scoring batch={bsz}")
+
+
+def _recsys_flops(cfg, bsz: int) -> float:
+    d_in = cfg.n_dense + cfg.n_sparse * cfg.embed_dim
+    f = 0.0
+    dims = (d_in,) + cfg.mlp + ((1,) if cfg.mlp else ())
+    for a, b in zip(dims[:-1], dims[1:]):
+        f += 2.0 * a * b
+    for i, hk in enumerate(cfg.cin_layers):
+        prev = cfg.n_sparse if i == 0 else cfg.cin_layers[i - 1]
+        f += 2.0 * hk * prev * cfg.n_sparse * cfg.embed_dim
+    if cfg.n_cross_layers:
+        f += cfg.n_cross_layers * 2.0 * d_in * d_in
+    if cfg.tower_mlp:
+        dt = (cfg.n_sparse // 2) * cfg.embed_dim
+        dims = (dt,) + cfg.tower_mlp
+        for a, b in zip(dims[:-1], dims[1:]):
+            f += 2.0 * 2.0 * a * b
+    return f * bsz
+
+
+# ---------------------------------------------------------------------------
+# IVF (paper) cells
+# ---------------------------------------------------------------------------
+
+
+def _ivf_cell(spec, shape, mesh, *, arch_override=None) -> Cell:
+    from repro.core import distributed_ivf as divf
+    cfg = arch_override or spec.model
+    dp = _dp(mesh)
+    model_size = mesh.shape["model"]
+    if shape.kind == "ivf_build":
+        from repro.core.kmeans import sharded_assign_step
+        n = shape.dims["sample"]
+        x_abs = SDS((n, cfg.dim), jnp.float32)
+        c_abs = SDS((cfg.n_clusters, cfg.dim), jnp.float32)
+        fn = sharded_assign_step(mesh, "data")
+        in_sh = (NamedSharding(mesh, P("data", None)),
+                 NamedSharding(mesh, P()))
+        return Cell(name=f"{spec.arch_id}:{shape.name}", fn=fn,
+                    args=(x_abs, c_abs), in_shardings=in_sh,
+                    model_flops=2.0 * n * cfg.n_clusters * cfg.dim,
+                    note="one distributed Lloyd step (IVF build)")
+
+    b = shape.dims["batch"]
+    storage = getattr(cfg, "storage_dtype", "float32")
+    dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+          "int8": jnp.int8}[storage]
+    sh_abs = divf.abstract_sharded(
+        cfg.n_docs, cfg.dim, cfg.n_clusters, cfg.list_pad, model_size,
+        dtype=dt)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    if b % dp_size:
+        dp = ()                              # tiny batch: replicate
+    q_abs = SDS((b, cfg.dim), jnp.float32)
+    steps = int(np.ceil(cfg.n_probe /
+                        (model_size * getattr(cfg, "probe_width", 1))))
+
+    def build(unroll):
+        return divf.make_distributed_search(
+            mesh, n_probe=cfg.n_probe, k=cfg.k,
+            patience_delta=cfg.patience_delta,
+            patience_phi=cfg.patience_phi, list_pad=cfg.list_pad,
+            dp_axes=dp, unroll_steps=unroll,
+            probe_width=getattr(cfg, "probe_width", 1),
+            int8_docs=storage == "int8")
+
+    in_sh = (NamedSharding(mesh, P("model", None, None)),
+             NamedSharding(mesh, P("model", None, None)),
+             NamedSharding(mesh, P("model", None)),
+             NamedSharding(mesh, P("model", None)),
+             NamedSharding(mesh, P("model", None)),
+             NamedSharding(mesh, P(dp, None)))
+    args = [sh_abs.centroids, sh_abs.docs, sh_abs.doc_ids, sh_abs.offsets,
+            sh_abs.sizes, q_abs]
+    if storage == "int8":
+        in_sh = in_sh + (NamedSharding(mesh, P("model", None)),)
+        args.append(sh_abs.doc_scales)
+    args = tuple(args)
+    # adaptive (real) program + unrolled 1/2-step costing variants.
+    # MODEL_FLOPS: centroid ranking happens once; the tile scan runs
+    # `steps` times across all model shards.
+    w_ = getattr(cfg, "probe_width", 1)
+    scan_flops = 2.0 * b * cfg.list_pad * cfg.dim * model_size * w_
+    rank_flops = 2.0 * b * cfg.n_clusters * cfg.dim
+    return Cell(
+        name=f"{spec.arch_id}:{shape.name}",
+        fn=build(None), args=args, in_shardings=in_sh,
+        cost_variants={"l1": (build(1), args, in_sh),
+                       "l2": (build(2), args, in_sh),
+                       "n_scale": steps - 1},
+        model_flops=scan_flops * steps + rank_flops,
+        note=f"adaptive patience search, {model_size} clusters/step, "
+             f"<= {steps} steps")
+
+
+def _retrieval_ivf_cell(spec, shape, mesh) -> Cell:
+    """The paper's technique serving the two-tower candidate store."""
+    cfg = spec.model
+    rc = cb.RetrievalConfig(
+        name="two-tower-ivf", n_docs=shape.dims["n_candidates"],
+        dim=cfg.tower_mlp[-1], n_clusters=4096, n_probe=64, k=100,
+        tau=10, patience_delta=7, list_pad=512)
+    cell = _ivf_cell(spec, cb.ShapeSpec("retrieval_cand_ivf", "ivf_serve",
+                                        {"batch": max(shape.dims["batch"],
+                                                      1)}),
+                     mesh, arch_override=rc)
+    cell.note = "paper technique on the 1M-candidate store: " + cell.note
+    return cell
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh) -> Cell:
+    spec = get_arch(arch_id)
+    if shape_name == "retrieval_cand_ivf":
+        return _retrieval_ivf_cell(spec, shape_for(spec, "retrieval_cand"),
+                                   mesh)
+    shape = shape_for(spec, shape_name)
+    if spec.family == "lm":
+        if shape.kind == "train":
+            return _lm_train_cell(spec, shape, mesh)
+        if shape.kind == "prefill":
+            return _lm_prefill_cell(spec, shape, mesh)
+        return _lm_decode_cell(spec, shape, mesh)
+    if spec.family == "gnn":
+        return _gnn_cell(spec, shape, mesh)
+    if spec.family == "recsys":
+        return _recsys_cell(spec, shape, mesh)
+    if spec.family == "ivf":
+        return _ivf_cell(spec, shape, mesh)
+    raise ValueError(spec.family)
+
+
+def all_cells() -> Tuple[Tuple[str, str], ...]:
+    """The 40 assigned cells + the paper's own cells + the IVF-backed
+    retrieval variant."""
+    out = []
+    for arch in cb.list_archs():
+        spec = get_arch(arch)
+        for s in spec.shapes:
+            out.append((arch, s.name))
+        if spec.family == "recsys" and spec.model.n_candidates:
+            out.append((arch, "retrieval_cand_ivf"))
+    return tuple(out)

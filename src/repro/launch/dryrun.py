@@ -1,0 +1,153 @@
+import os
+# 512 placeholder devices for the production mesh. all-reduce-promotion
+# is disabled: XLA:CPU's AllReducePromotion pass crashes (CreateBinary
+# on a copy-rooted reduction) when differentiating through partial-auto
+# shard_map (the MoE per-DP-shard dispatch); the pass is a CPU-only
+# int16 promotion detail irrelevant to the TPU target.
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           "--xla_disable_hlo_passes=all-reduce-promotion")
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production mesh and dump memory / cost / collective artifacts.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b \
+        --shape train_4k --mesh single --out artifacts/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+The 512 placeholder host devices exist ONLY here (smoke tests and
+benchmarks see 1 device). Compilation success per cell is the
+deliverable; artifacts feed benchmarks/roofline.py.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.launch.hlo_analysis import parse_collectives
+
+
+def _compile_once(fn, args, in_sh, out_sh, donate):
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=donate)
+    lowered = jitted.lower(*args)
+    compiled = lowered.compile()
+    return compiled
+
+
+def _cost_dict(compiled) -> Dict:
+    ca = compiled.cost_analysis() or {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             *, skip_cost: bool = False) -> Dict:
+    from repro.launch import cells as cells_lib
+    from repro.launch.mesh import make_production_mesh
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    rec: Dict = {"arch": arch, "shape": shape,
+                 "mesh": "multi" if multi_pod else "single",
+                 "n_devices": mesh.size, "status": "ok"}
+    from repro.distributed.context import activation_mesh
+    try:
+        with mesh, activation_mesh(mesh):
+            cell = cells_lib.build_cell(arch, shape, mesh)
+            compiled = _compile_once(cell.fn, cell.args,
+                                     cell.in_shardings,
+                                     cell.out_shardings,
+                                     cell.donate_argnums)
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_gb": mem.argument_size_in_bytes / 1e9,
+                "output_gb": mem.output_size_in_bytes / 1e9,
+                "temp_gb": mem.temp_size_in_bytes / 1e9,
+                "alias_gb": mem.alias_size_in_bytes / 1e9,
+                "peak_gb": (mem.argument_size_in_bytes +
+                            mem.output_size_in_bytes +
+                            mem.temp_size_in_bytes -
+                            mem.alias_size_in_bytes) / 1e9,
+            }
+            rec["note"] = cell.note
+            rec["model_flops_global"] = cell.model_flops
+            if not skip_cost:
+                if cell.cost_variants is None:
+                    rec["cost"] = _cost_dict(compiled)
+                    rec["collectives"] = parse_collectives(
+                        compiled.as_text()).to_dict()
+                    rec["cost_method"] = "direct"
+                else:
+                    cv = cell.cost_variants
+                    c1 = _compile_once(*cv["l1"], None, ())
+                    c2 = _compile_once(*cv["l2"], None, ())
+                    d1, d2 = _cost_dict(c1), _cost_dict(c2)
+                    col1 = parse_collectives(c1.as_text())
+                    col2 = parse_collectives(c2.as_text())
+                    n = cv["n_scale"]
+                    # extrapolation floor: never below the measured
+                    # 2-layer program (partitioner choices can differ
+                    # between L1 and L2, producing negative deltas)
+                    rec["cost"] = {
+                        k: max(d1[k] + n * (d2[k] - d1[k]), d2[k])
+                        for k in d1}
+                    per_kind = {}
+                    kinds = set(col1.bytes_by_kind) | \
+                        set(col2.bytes_by_kind)
+                    for k in kinds:
+                        b1 = col1.bytes_by_kind.get(k, 0)
+                        b2 = col2.bytes_by_kind.get(k, 0)
+                        per_kind[k] = max(b1 + n * (b2 - b1), b2, 0)
+                    rec["collectives"] = {
+                        "bytes_by_kind": per_kind,
+                        "count_by_kind": col2.count_by_kind,
+                        "total_bytes": sum(per_kind.values())}
+                    rec["cost_method"] = "unrolled L1/L2 delta"
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["compile_s"] = round(time.time() - t0, 1)
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape}__{rec['mesh']}".replace("/", "_")
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-cost", action="store_true",
+                    help="compile-only (no L1/L2 costing variants)")
+    args = ap.parse_args()
+
+    from repro.launch import cells as cells_lib
+    todo = cells_lib.all_cells() if args.all else [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_fail = 0
+    for arch, shape in todo:
+        for mp in meshes:
+            rec = run_cell(arch, shape, mp, args.out,
+                           skip_cost=args.skip_cost)
+            mark = "OK " if rec["status"] == "ok" else "FAIL"
+            extra = "" if rec["status"] == "ok" else \
+                " :: " + rec.get("error", "")[:160]
+            peak = rec.get("memory", {}).get("peak_gb", float("nan"))
+            print(f"[{mark}] {arch:22s} {shape:18s} "
+                  f"{rec['mesh']:6s} peak={peak:8.2f}GB "
+                  f"t={rec['compile_s']:6.1f}s{extra}", flush=True)
+            n_fail += rec["status"] != "ok"
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Post-SPMD HLO parsing: per-device collective bytes + roofline terms.
+
+``compiled.as_text()`` is the partitioned per-device program, so every
+shape is a per-device (local) shape. We sum the *result* bytes of every
+collective op — the per-device ICI payload proxy. NOTE (methodology):
+XLA's HloCostAnalysis counts while-loop bodies ONCE regardless of trip
+count, so scanned-layer programs are costed via the unrolled L1/L2
+delta trick in launch/dryrun.py, never from the scanned program.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches `bf16[128,1024]{1,0}` shape atoms
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def to_dict(self) -> Dict:
+        return {"bytes_by_kind": self.bytes_by_kind,
+                "count_by_kind": self.count_by_kind,
+                "total_bytes": self.total_bytes}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        for kind in _COLLECTIVES:
+            # result dtype[shape] ... = kind(...); also fused-start forms
+            if re.search(rf"=\s*(\(|\w+\[)[^=]*\b{kind}(-start)?\(",
+                         line):
+                lhs = line.split("=", 1)[0] + "=" + \
+                    line.split("=", 1)[1].split(f"{kind}", 1)[0]
+                shapes = _SHAPE_RE.findall(lhs)
+                b = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+                stats.bytes_by_kind[kind] = \
+                    stats.bytes_by_kind.get(kind, 0) + b
+                stats.count_by_kind[kind] = \
+                    stats.count_by_kind.get(kind, 0) + 1
+                break
+    return stats
+
+
+# --- hardware constants (TPU v5e target) --------------------------------------
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (per chip, one direction)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float
+                   ) -> Dict[str, float]:
+    """All inputs are per-device quantities; outputs in seconds."""
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm_bytes / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k]
+                              if k.endswith("_s") else -1.0)
+    return terms

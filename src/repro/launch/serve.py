@@ -1,0 +1,72 @@
+"""Retrieval serving driver: build an IVF index over a corpus, pick a
+policy, stream a query log through the wave scheduler and report the
+paper's effectiveness/efficiency metrics.
+
+    PYTHONPATH=src python -m repro.launch.serve --policy patience \
+        --n-docs 50000 --queries 1024
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_index, brute_force, metrics, policies, search
+from repro.core.serving import WaveScheduler
+from repro.data.synthetic import clustered_corpus
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="patience",
+                    choices=["fixed", "patience"])
+    ap.add_argument("--n-docs", type=int, default=50_000)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--clusters", type=int, default=256)
+    ap.add_argument("--queries", type=int, default=1024)
+    ap.add_argument("--n-probe", type=int, default=48)
+    ap.add_argument("--k", type=int, default=50)
+    ap.add_argument("--delta", type=int, default=5)
+    ap.add_argument("--phi", type=float, default=95.0)
+    ap.add_argument("--wave-size", type=int, default=128)
+    ap.add_argument("--no-compact", action="store_true")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    c = clustered_corpus(n_docs=args.n_docs, dim=args.dim,
+                         n_components=args.clusters,
+                         n_queries=args.queries, seed=0)
+    index = build_index(c.docs, args.clusters, list_pad=256, n_iters=6)
+    print(f"index built: {index.n_clusters} clusters "
+          f"({time.time() - t0:.1f}s)")
+
+    _, exact = brute_force(jnp.asarray(c.docs), jnp.asarray(c.queries),
+                           args.k)
+    exact = np.asarray(exact)
+
+    if args.policy == "fixed":
+        pol = policies.fixed(args.n_probe, k=args.k)
+        res = search(index, jnp.asarray(c.queries), pol)
+        ids, probes = np.asarray(res.topk_ids), np.asarray(res.probes)
+        print(metrics.summarize(ids, probes, exact, c.relevant))
+        return
+
+    ws = WaveScheduler(index, wave_size=args.wave_size, chunk=4,
+                       k=args.k, n_probe=args.n_probe, delta=args.delta,
+                       phi=args.phi)
+    t1 = time.time()
+    rep = ws.serve(c.queries, compact=not args.no_compact)
+    wall = (time.time() - t1) * 1000
+    ids = np.stack([rep.results[i] for i in range(args.queries)])
+    probes = np.array([rep.probes[i] for i in range(args.queries)])
+    summ = metrics.summarize(ids, probes, exact, c.relevant, wall)
+    summ["occupancy"] = round(rep.occupancy, 3)
+    summ["waves"] = rep.waves
+    print({k: round(v, 4) if isinstance(v, float) else v
+           for k, v in summ.items()})
+
+
+if __name__ == "__main__":
+    main()

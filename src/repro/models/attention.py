@@ -1,0 +1,337 @@
+"""Attention: chunked-causal (flash-style) training path, GQA + MLA,
+decode steps over bf16/int8 KV caches.
+
+The chunked path scans query blocks so the (chunk, S) score tile is the
+peak intermediate — never the full (S, S) matrix (required for the
+prefill_32k cells). The Pallas flash kernel in ``repro.kernels`` is the
+TPU-target replacement for the inner block; this jnp path is the oracle
+and the dry-run lowering.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MLAConfig, TransformerConfig
+from repro.distributed.context import act, model_size
+from repro.models.layers import apply_rope, dense, dense_init, rmsnorm, \
+    rmsnorm_init
+
+Params = Dict[str, jnp.ndarray]
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg: TransformerConfig) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim()
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d),
+    }
+
+
+def _causal_chunk_attn(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                       chunk: int) -> jnp.ndarray:
+    """Flat-head chunked causal attention.
+
+    q: (B,S,H,hd); k: (B,S,H,hd) (GQA KV repeated to H by the caller so
+    the 'model' sharding lands uniformly on the head axis — Megatron
+    style; the repeat is transient and head-sharded); v: (B,S,H,vd).
+    Peak intermediate = one (H, chunk, S) score tile per scan step.
+    """
+    b, s, h, hd = q.shape
+    chunk = min(chunk, s)
+    s_pad = ((s + chunk - 1) // chunk) * chunk
+    if s_pad != s:  # pad queries only; padded rows are sliced off below
+        q = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    n_chunks = s_pad // chunk
+    scale = 1.0 / np.sqrt(hd)
+    qc = q.reshape(b, n_chunks, chunk, h, hd)
+    kpos = jnp.arange(k.shape[1])
+
+    def step(_, inp):
+        qi, i = inp                                # (B,chunk,H,hd), ()
+        qpos = i * chunk + jnp.arange(chunk)
+        logits = jnp.einsum("bchd,bshd->bhcs", qi.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        logits = act(logits, ("dp", "model", None, None))
+        mask = kpos[None, :] <= qpos[:, None]      # (chunk, S)
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        p = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhcs,bshv->bchv", p.astype(v.dtype), v)
+        o = act(o, ("dp", None, "model", None))
+        return None, o
+
+    _, out = jax.lax.scan(step, None,
+                          (qc.swapaxes(0, 1), jnp.arange(n_chunks)))
+    vd = v.shape[-1]
+    out = out.swapaxes(0, 1).reshape(b, s_pad, h, vd)
+    return out[:, :s] if s_pad != s else out
+
+
+def gqa_forward(p: Params, x: jnp.ndarray, cfg: TransformerConfig,
+                positions: jnp.ndarray) -> jnp.ndarray:
+    b, s, d = x.shape
+    hd, h, kv = cfg.head_dim(), cfg.n_heads, cfg.n_kv_heads
+    g = h // kv
+    q = dense(p["wq"], x).reshape(b, s, h, hd)
+    k = dense(p["wk"], x).reshape(b, s, kv, hd)
+    v = dense(p["wv"], x).reshape(b, s, kv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if g > 1:  # repeat KV heads to H (transient, head-sharded)
+        if kv % max(model_size(), 1):
+            # kv doesn't divide TP: disambiguate (replicate the small
+            # head dim) BEFORE the repeat, else the partitioner emits
+            # involuntary full-remat copies (and trips an XLA:CPU
+            # AllReducePromotion crash)
+            k = act(k, ("dp", None, None, None))
+            v = act(v, ("dp", None, None, None))
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    q = act(q, ("dp", None, "model", None))
+    k = act(k, ("dp", None, "model", None))
+    v = act(v, ("dp", None, "model", None))
+    o = _causal_chunk_attn(q, k, v, cfg.attn_chunk)
+    o = act(o, ("dp", None, "model", None))
+    return dense(p["wo"], o.reshape(b, s, h * hd))
+
+
+# ---------------------------------------------------------------------------
+# KV cache (bf16 / int8) + decode
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray                  # (L,B,Smax,KV,hd) bf16 or int8
+    v: jnp.ndarray
+    k_scale: Optional[jnp.ndarray]  # (L,B,Smax,KV) f32 (int8 only)
+    v_scale: Optional[jnp.ndarray]
+
+
+def init_kv_cache(cfg: TransformerConfig, batch: int, max_seq: int
+                  ) -> KVCache:
+    hd, kv, L = cfg.head_dim(), cfg.n_kv_heads, cfg.n_layers
+    if cfg.kv_cache_dtype == "int8":
+        z = jnp.zeros((L, batch, max_seq, kv, hd), jnp.int8)
+        sc = jnp.ones((L, batch, max_seq, kv), jnp.float32)
+        return KVCache(z, z, sc, sc)
+    z = jnp.zeros((L, batch, max_seq, kv, hd), jnp.bfloat16)
+    return KVCache(z, z, None, None)
+
+
+def quantize_kv(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(…, hd) -> int8 data + per-vector scale."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(jnp.bfloat16)
+
+
+def cache_update(layer_k: jnp.ndarray, layer_scale: Optional[jnp.ndarray],
+                 new: jnp.ndarray, pos: jnp.ndarray, *, use_dus: bool = True
+                 ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Write (B,1,KV,hd) at seq position ``pos``.
+
+    use_dus: dynamic_update_slice (owning-shard write). The masked-select
+    alternative (full rewrite) is kept for the §Perf ablation.
+    """
+    if layer_scale is not None:
+        qv, sc = quantize_kv(new)
+        if use_dus:
+            k = jax.lax.dynamic_update_slice(
+                layer_k, qv, (0, pos, 0, 0))
+            s = jax.lax.dynamic_update_slice(
+                layer_scale, sc, (0, pos, 0))
+        else:
+            smax = layer_k.shape[1]
+            m = (jnp.arange(smax) == pos)[None, :, None, None]
+            k = jnp.where(m, qv, layer_k)
+            s = jnp.where(m[..., 0], sc, layer_scale)
+        return k, s
+    new = new.astype(layer_k.dtype)
+    if use_dus:
+        return jax.lax.dynamic_update_slice(layer_k, new, (0, pos, 0, 0)), None
+    smax = layer_k.shape[1]
+    m = (jnp.arange(smax) == pos)[None, :, None, None]
+    return jnp.where(m, new, layer_k), None
+
+
+def decode_attn(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                k_scale, v_scale, pos: jnp.ndarray) -> jnp.ndarray:
+    """q:(B,1,KV,G,hd); caches (B,Smax,KV,hd) -> (B,1,KV,G,hd).
+
+    Written reduction-first so the SPMD partitioner turns a seq-sharded
+    cache into local partial softmax stats + a tiny psum (DESIGN §5).
+    """
+    b, _, kv, g, hd = q.shape
+    smax = k_cache.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+    # int8 KV: the per-position scales are folded AFTER the QK dot (for
+    # K) and INTO the probabilities (for V), so the dequantized
+    # (B,S,KV,hd) f32 cache is never materialised — only the small
+    # (B,KV,G,1,S) logits carry the correction.
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(jnp.bfloat16),
+                        k_cache.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32) * scale
+    if k_scale is not None:
+        logits = logits * jnp.moveaxis(
+            k_scale.astype(jnp.float32), 1, 2)[:, :, None, None, :]
+    mask = (jnp.arange(smax) <= pos)[None, None, None, None, :]
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    if v_scale is not None:
+        p = p * jnp.moveaxis(
+            v_scale.astype(jnp.float32), 1, 2)[:, :, None, None, :]
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(jnp.bfloat16),
+                     v_cache.astype(jnp.bfloat16),
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def gqa_decode(p: Params, x: jnp.ndarray, cfg: TransformerConfig,
+               layer_cache, pos: jnp.ndarray):
+    """x: (B,1,d); layer_cache: (k, v, k_scale, v_scale) for this layer."""
+    b, s, d = x.shape
+    hd, h, kv = cfg.head_dim(), cfg.n_heads, cfg.n_kv_heads
+    g = h // kv
+    lk, lv, lks, lvs = layer_cache
+    q = dense(p["wq"], x).reshape(b, 1, h, hd)
+    k = dense(p["wk"], x).reshape(b, 1, kv, hd)
+    v = dense(p["wv"], x).reshape(b, 1, kv, hd)
+    posv = jnp.full((b, 1), pos)
+    q = apply_rope(q, posv, cfg.rope_theta).reshape(b, 1, kv, g, hd)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    lk, lks = cache_update(lk, lks, k, pos)
+    lv, lvs = cache_update(lv, lvs, v, pos)
+    o = decode_attn(q, lk, lv, lks, lvs, pos)
+    out = dense(p["wo"], o.reshape(b, 1, h * hd))
+    return out, (lk, lv, lks, lvs)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-style latent attention) — MiniCPM3
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg: TransformerConfig) -> Params:
+    m = cfg.mla or MLAConfig()
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": dense_init(ks[0], d, m.q_lora_rank),
+        "q_norm": rmsnorm_init(m.q_lora_rank),
+        "wq_b": dense_init(ks[1], m.q_lora_rank, h * qk),
+        "wkv_a": dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank),
+        "wk_b": dense_init(ks[3], m.kv_lora_rank, h * m.qk_nope_head_dim),
+        "wv_b": dense_init(ks[4], m.kv_lora_rank, h * m.v_head_dim),
+        "wo": dense_init(ks[5], h * m.v_head_dim, d),
+    }
+
+
+def _mla_qkv(p: Params, x: jnp.ndarray, cfg: TransformerConfig,
+             positions: jnp.ndarray):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    cq = rmsnorm(p["q_norm"], dense(p["wq_a"], x))
+    q = dense(p["wq_b"], cq).reshape(
+        b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions,
+                        cfg.rope_theta)
+    kv = dense(p["wkv_a"], x)
+    ckv = rmsnorm(p["kv_norm"], kv[..., : m.kv_lora_rank])
+    k_rope = apply_rope(kv[..., m.kv_lora_rank:][:, :, None, :], positions,
+                        cfg.rope_theta)                   # (B,S,1,rope)
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_forward(p: Params, x: jnp.ndarray, cfg: TransformerConfig,
+                positions: jnp.ndarray) -> jnp.ndarray:
+    """Training path: expand latent to per-head K/V, chunked causal attn."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(p, x, cfg, positions)
+    ckv = act(ckv, ("dp", None, None))
+    k_nope = dense(p["wk_b"], ckv).reshape(b, s, h, m.qk_nope_head_dim)
+    v = dense(p["wv_b"], ckv).reshape(b, s, h, m.v_head_dim)
+    k_nope = act(k_nope, ("dp", None, "model", None))
+    v = act(v, ("dp", None, "model", None))
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, m.qk_rope_head_dim))], -1)
+    q = act(q, ("dp", None, "model", None))
+    k = act(k, ("dp", None, "model", None))
+    v = act(v, ("dp", None, "model", None))
+    o = _causal_chunk_attn(q, k, v, cfg.attn_chunk)
+    o = act(o, ("dp", None, "model", None))
+    return dense(p["wo"], o.reshape(b, s, h * m.v_head_dim))
+
+
+class MLACache(NamedTuple):
+    ckv: jnp.ndarray     # (L,B,Smax,r)
+    k_rope: jnp.ndarray  # (L,B,Smax,rope)
+
+
+def init_mla_cache(cfg: TransformerConfig, batch: int, max_seq: int
+                   ) -> MLACache:
+    m = cfg.mla
+    return MLACache(
+        jnp.zeros((cfg.n_layers, batch, max_seq, m.kv_lora_rank),
+                  jnp.bfloat16),
+        jnp.zeros((cfg.n_layers, batch, max_seq, m.qk_rope_head_dim),
+                  jnp.bfloat16))
+
+
+def mla_decode(p: Params, x: jnp.ndarray, cfg: TransformerConfig,
+               layer_cache, pos: jnp.ndarray):
+    """Absorbed-matrix MLA decode (DeepSeek-V2 §: O(S·r) per step —
+    attention runs entirely in the latent space)."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    ckv_c, kr_c = layer_cache                       # (B,Smax,r), (B,Smax,rope)
+    posv = jnp.full((b, 1), pos)
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(p, x, cfg, posv)
+    ckv_c = jax.lax.dynamic_update_slice(
+        ckv_c, ckv.astype(ckv_c.dtype), (0, pos, 0))
+    kr_c = jax.lax.dynamic_update_slice(
+        kr_c, k_rope[:, :, 0, :].astype(kr_c.dtype), (0, pos, 0))
+    wk_b = p["wk_b"]["w"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    # absorb W_uk into the query:  q_lat[b,h,r] = q_nope · W_uk
+    q_lat = jnp.einsum("bqhn,rhn->bhqr", q_nope.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))    # (B,H,1,r)
+    scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    logits = (jnp.einsum("bhqr,bsr->bhqs", q_lat,
+                         ckv_c.astype(jnp.float32))
+              + jnp.einsum("bqhp,bsp->bhqs", q_rope.astype(jnp.float32),
+                           kr_c.astype(jnp.float32))) * scale
+    smax = ckv_c.shape[1]
+    mask = (jnp.arange(smax) <= pos)[None, None, None, :]
+    logits = jnp.where(mask, logits, NEG_INF)
+    prob = jax.nn.softmax(logits, axis=-1)
+    lat = jnp.einsum("bhqs,bsr->bhqr", prob, ckv_c.astype(jnp.float32))
+    wv_b = p["wv_b"]["w"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    o = jnp.einsum("bhqr,rhv->bqhv", lat, wv_b.astype(jnp.float32))
+    out = dense(p["wo"], o.reshape(b, 1, h * m.v_head_dim)
+                .astype(jnp.bfloat16))
+    return out, (ckv_c, kr_c)

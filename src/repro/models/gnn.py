@@ -1,0 +1,155 @@
+"""GAT (and mean/sum/max aggregators) via edge-list segment ops.
+
+JAX has no CSR SpMM — message passing is built from
+``jax.ops.segment_sum`` / ``segment_max`` over an edge index, which IS
+the system (taxonomy §GNN, SpMM/SDDMM regime):
+  SDDMM  = per-edge attention logits (gather src/dst features)
+  softmax= segment_max + segment_sum over incoming edges per dst
+  SpMM   = alpha-weighted segment_sum of source features.
+
+Shapes: full-graph (Cora / ogbn-products), sampled minibatch blocks
+(fanout sampler in ``repro.data.graph_sampler``), and batched small
+graphs (disjoint-union batching) all share this one layer.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.models.layers import cross_entropy_loss
+
+Params = Dict[str, jnp.ndarray]
+
+
+class Graph(NamedTuple):
+    feat: jnp.ndarray       # (N, F)
+    edge_src: jnp.ndarray   # (E,) int32
+    edge_dst: jnp.ndarray   # (E,) int32
+    label: jnp.ndarray      # (N,) int32, -1 = unlabeled
+    edge_mask: Optional[jnp.ndarray] = None  # (E,) bool for padded edges
+
+
+def gat_layer_init(key, d_in: int, d_out: int, n_heads: int) -> Params:
+    ks = jax.random.split(key, 3)
+    s = 1.0 / np.sqrt(d_in)
+    return {
+        "w": jax.random.normal(ks[0], (d_in, n_heads, d_out),
+                               jnp.float32) * s,
+        "a_src": jax.random.normal(ks[1], (n_heads, d_out),
+                                   jnp.float32) * 0.1,
+        "a_dst": jax.random.normal(ks[2], (n_heads, d_out),
+                                   jnp.float32) * 0.1,
+        "b": jnp.zeros((n_heads, d_out), jnp.float32),
+    }
+
+
+def gat_layer(p: Params, g: Graph, x: jnp.ndarray, *, n_nodes: int,
+              aggregator: str = "attn", final: bool = False) -> jnp.ndarray:
+    """x: (N, F) -> (N, heads*d_out) (concat) or (N, d_out) (final mean)."""
+    h = jnp.einsum("nf,fhd->nhd", x, p["w"])             # (N, H, D)
+    src_h = jnp.take(h, g.edge_src, axis=0)              # (E, H, D)
+    if aggregator == "attn":
+        # SDDMM: edge logits
+        e_src = jnp.take(jnp.einsum("nhd,hd->nh", h, p["a_src"]),
+                         g.edge_src, axis=0)
+        e_dst = jnp.take(jnp.einsum("nhd,hd->nh", h, p["a_dst"]),
+                         g.edge_dst, axis=0)
+        logits = jax.nn.leaky_relu(e_src + e_dst, 0.2)   # (E, H)
+        if g.edge_mask is not None:
+            logits = jnp.where(g.edge_mask[:, None], logits, -1e30)
+        # segment softmax over incoming edges of each dst
+        mx = jax.ops.segment_max(logits, g.edge_dst, num_segments=n_nodes)
+        ex = jnp.exp(logits - jnp.take(mx, g.edge_dst, axis=0))
+        if g.edge_mask is not None:
+            ex = jnp.where(g.edge_mask[:, None], ex, 0.0)
+        den = jax.ops.segment_sum(ex, g.edge_dst, num_segments=n_nodes)
+        alpha = ex / jnp.maximum(jnp.take(den, g.edge_dst, axis=0), 1e-9)
+        msg = src_h * alpha[..., None]
+        out = jax.ops.segment_sum(msg, g.edge_dst, num_segments=n_nodes)
+    elif aggregator in ("mean", "sum"):
+        m = src_h if g.edge_mask is None else \
+            src_h * g.edge_mask[:, None, None]
+        out = jax.ops.segment_sum(m, g.edge_dst, num_segments=n_nodes)
+        if aggregator == "mean":
+            ones = jnp.ones((g.edge_src.shape[0],), x.dtype) if \
+                g.edge_mask is None else g.edge_mask.astype(x.dtype)
+            deg = jax.ops.segment_sum(ones, g.edge_dst,
+                                      num_segments=n_nodes)
+            out = out / jnp.maximum(deg, 1.0)[:, None, None]
+    elif aggregator == "max":
+        m = src_h if g.edge_mask is None else \
+            jnp.where(g.edge_mask[:, None, None], src_h, -1e30)
+        out = jax.ops.segment_max(m, g.edge_dst, num_segments=n_nodes)
+        out = jnp.maximum(out, -1e29)
+    else:
+        raise ValueError(aggregator)
+    out = out + p["b"]
+    if final:
+        return out.mean(axis=1)                          # average heads
+    return jax.nn.elu(out).reshape(n_nodes, -1)          # concat heads
+
+
+def init_params(cfg: GNNConfig, key) -> Params:
+    ks = jax.random.split(key, cfg.n_layers)
+    p: Params = {}
+    d_in = cfg.d_in
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        p[f"layer_{i}"] = gat_layer_init(ks[i], d_in, d_out, cfg.n_heads)
+        d_in = cfg.d_hidden * cfg.n_heads
+    return p
+
+
+def forward(cfg: GNNConfig, params: Params, g: Graph) -> jnp.ndarray:
+    n = g.feat.shape[0]
+    x = g.feat
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        x = gat_layer(params[f"layer_{i}"], g, x, n_nodes=n,
+                      aggregator=cfg.aggregator, final=last)
+    return x                                             # (N, n_classes)
+
+
+def forward_blocks(cfg: GNNConfig, params: Params, feats: jnp.ndarray,
+                   blocks, n_outs: Tuple[int, ...]) -> jnp.ndarray:
+    """Minibatch path over sampled blocks (outermost-first list of
+    array-dicts; see repro.data.graph_sampler). feats: features of
+    blocks[-1].nodes; n_outs: static per-block output-prefix sizes."""
+    x = feats
+    for i in range(cfg.n_layers):
+        b = blocks[-1 - i]              # innermost block = first layer
+        n_in = x.shape[0]
+        g = Graph(feat=x, edge_src=b["edge_src"], edge_dst=b["edge_dst"],
+                  label=jnp.zeros((n_in,), jnp.int32),
+                  edge_mask=b["edge_mask"])
+        last = i == cfg.n_layers - 1
+        x = gat_layer(params[f"layer_{i}"], g, x, n_nodes=n_in,
+                      aggregator=cfg.aggregator, final=last)
+        x = x[: n_outs[len(blocks) - 1 - i]]
+    return x
+
+
+def loss_blocks(cfg: GNNConfig, params: Params, feats: jnp.ndarray,
+                blocks, labels: jnp.ndarray,
+                n_outs: Tuple[int, ...]) -> Tuple[jnp.ndarray, Dict]:
+    logits = forward_blocks(cfg, params, feats, blocks, n_outs)
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = cross_entropy_loss(logits, jnp.maximum(labels, 0), mask)
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels) * mask) / \
+        jnp.maximum(mask.sum(), 1.0)
+    return ce, {"acc": acc}
+
+
+def loss_fn(cfg: GNNConfig, params: Params, g: Graph
+            ) -> Tuple[jnp.ndarray, Dict]:
+    logits = forward(cfg, params, g)
+    mask = (g.label >= 0).astype(jnp.float32)
+    ce = cross_entropy_loss(logits, jnp.maximum(g.label, 0), mask)
+    acc = jnp.sum((jnp.argmax(logits, -1) == g.label) * mask) / \
+        jnp.maximum(mask.sum(), 1.0)
+    return ce, {"acc": acc}

@@ -1,0 +1,90 @@
+"""Shared neural building blocks (pure-jnp, pjit-friendly)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+Params = Dict[str, jnp.ndarray]
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               scale: Optional[float] = None) -> Params:
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense(p: Params, x: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    y = x.astype(dtype) @ p["w"].astype(dtype)
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+def mlp_init(key, d: int, d_ff: int, mlp_type: str) -> Params:
+    ks = jax.random.split(key, 3)
+    if mlp_type == "swiglu":
+        return {"wi": dense_init(ks[0], d, d_ff),
+                "wg": dense_init(ks[1], d, d_ff),
+                "wo": dense_init(ks[2], d_ff, d, scale=1.0 / np.sqrt(d_ff))}
+    return {"wi": dense_init(ks[0], d, d_ff),
+            "wo": dense_init(ks[2], d_ff, d, scale=1.0 / np.sqrt(d_ff))}
+
+
+def mlp(p: Params, x: jnp.ndarray, mlp_type: str,
+        dtype=jnp.bfloat16) -> jnp.ndarray:
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(dense(p["wg"], x, dtype)) * dense(p["wi"], x, dtype)
+    else:
+        h = jax.nn.gelu(dense(p["wi"], x, dtype))
+    return dense(p["wo"], h, dtype)
+
+
+# --- rotary ---------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (..., S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                     # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..,S,hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]               # (..,S,1,hd/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Stable CE over the last axis; logits float32 recommended."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

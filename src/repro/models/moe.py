@@ -1,0 +1,160 @@
+"""Mixture-of-Experts FFN: sort-based capacity dispatch + EP sharding.
+
+No O(T·E·C) one-hot dispatch matmul (DESIGN §5): tokens are argsorted by
+expert, ranked within expert, and scattered into an (E, capacity, d)
+buffer that is sharding-constrained to the `model` axis — the SPMD
+partitioner turns the re-layout into the MoE all-to-all. Covers both
+DBRX (16e top-4) and DeepSeekMoE (2 shared + 64 routed top-6,
+first layer dense).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoEConfig, TransformerConfig
+from repro.distributed import context as ctx
+from repro.models.layers import dense, dense_init, mlp, mlp_init
+
+Params = Dict[str, jnp.ndarray]
+
+
+def moe_init(key, cfg: TransformerConfig) -> Params:
+    mo = cfg.moe
+    d, ff = cfg.d_model, mo.d_ff_expert
+    e = mo.n_experts
+    ks = jax.random.split(key, 6)
+    scale_in = 1.0 / np.sqrt(d)
+    scale_out = 1.0 / np.sqrt(ff)
+    p = {
+        "router": dense_init(ks[0], d, e, scale=0.02),
+        "wi": jax.random.normal(ks[1], (e, d, ff), jnp.float32) * scale_in,
+        "wg": jax.random.normal(ks[2], (e, d, ff), jnp.float32) * scale_in,
+        "wo": jax.random.normal(ks[3], (e, ff, d), jnp.float32) * scale_out,
+    }
+    if mo.n_shared:
+        p["shared"] = mlp_init(ks[4], d, mo.n_shared * ff, "swiglu")
+    return p
+
+
+def _dispatch_indices(expert_idx: jnp.ndarray, n_experts: int, capacity: int
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """expert_idx: (T*K,) -> (slot index into E*C, keep mask, perm)."""
+    tk = expert_idx.shape[0]
+    perm = jnp.argsort(expert_idx)                      # stable
+    sorted_e = jnp.take(expert_idx, perm)
+    starts = jnp.searchsorted(sorted_e, jnp.arange(n_experts),
+                              side="left")
+    rank = jnp.arange(tk) - jnp.take(starts, sorted_e)
+    keep = rank < capacity
+    # dropped tokens get an out-of-range slot: scatter mode="drop" skips
+    # them (a clamped slot would clobber the last valid entry)
+    slot = jnp.where(keep, sorted_e * capacity + rank,
+                     n_experts * capacity)
+    return slot, keep, perm
+
+
+def moe_forward(p: Params, x: jnp.ndarray, cfg: TransformerConfig,
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,d) -> (out, aux_loss).
+
+    Under a mesh, the token-local work (routing, argsort, capacity
+    scatter) runs inside a shard_map over the DP axes — argsort on a
+    globally-sharded token dim would otherwise force XLA to all-gather
+    every token (observed: 100+GB dispatch buffers). The `model` axis
+    stays auto inside (EP all-to-all via sharding constraints)."""
+    mesh = ctx.current_mesh()
+    dp = ctx.dp_axes()
+    if mesh is None or dp is None:
+        return _moe_core(p, x, cfg)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    if x.shape[0] % dp_size:        # tiny/unsharded batch (B=1 decode)
+        return _moe_core(p, x, cfg)
+    from jax.sharding import PartitionSpec as P
+
+    def body(xl, pl):
+        # ZeRO-3 gather-on-use: expert weights enter FSDP-sharded on
+        # their d/ff dim (in_specs below) and are all-gathered in bf16
+        # per use; the transpose of the gather reduce-scatters the
+        # expert grads back to shards. The E dim stays auto ('model').
+        pl = dict(pl)
+        for name, dim in (("wi", 1), ("wg", 1), ("wo", 1)):
+            w = pl[name].astype(jnp.bfloat16)
+            for a in dp:
+                w = jax.lax.all_gather(w, a, axis=dim, tiled=True)
+            pl[name] = w
+        out, aux = _moe_core(pl, xl, cfg)
+        # aux returned per-shard (averaged outside) — a scalar pmean
+        # inside a partial-auto shard_map trips an XLA:CPU
+        # AllReducePromotion crash
+        return out, aux.reshape(1)
+
+    p_specs = {k: (P(None, dp, None) if k in ("wi", "wg", "wo")
+                   else jax.tree.map(lambda _: P(), v))
+               for k, v in p.items()}
+    sm = jax.shard_map(body, mesh=mesh,
+                       in_specs=(P(dp, None, None), p_specs),
+                       out_specs=(P(dp, None, None), P(dp)),
+                       axis_names=set(dp))
+    out, aux_shards = sm(x, p)
+    return out, jnp.mean(aux_shards)
+
+
+def _moe_core(p: Params, x: jnp.ndarray, cfg: TransformerConfig,
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    mo = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = mo.n_experts, mo.top_k
+    # capacity floor: at small T (decode) a ceil() of <8 drops tokens
+    # catastrophically; min(t*k, 8) guarantees drop-free tiny batches.
+    capacity = int(max(np.ceil(t * k / e * mo.capacity_factor),
+                       min(t * k, 8)))
+    xt = x.reshape(t, d)
+
+    logits = dense(p["router"], xt, dtype=jnp.float32)      # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                  # (T,K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch): E * mean(frac_tokens * frac_prob)
+    frac_prob = probs.mean(0)
+    counts = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(1.0)
+    frac_tok = counts / (t * k)
+    aux = e * jnp.sum(frac_prob * frac_tok) * mo.router_aux_weight
+
+    flat_e = top_e.reshape(-1)
+    slot, keep, perm = _dispatch_indices(flat_e, e, capacity)
+    tok_of = perm // k                                      # token per slot
+    gathered = jnp.take(xt, tok_of, axis=0)                 # (T*K, d)
+    gathered = ctx.act(gathered, ("model", None))
+    buf = jnp.zeros((e * capacity, d), xt.dtype)
+    buf = buf.at[slot].set(jnp.where(keep[:, None], gathered, 0.0),
+                           mode="drop")
+    buf = buf.reshape(e, capacity, d)
+    buf = ctx.act(buf, ("model", None, None))
+
+    bh = buf.astype(jnp.bfloat16)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", bh,
+                               p["wg"].astype(jnp.bfloat16))) * \
+        jnp.einsum("ecd,edf->ecf", bh, p["wi"].astype(jnp.bfloat16))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(jnp.bfloat16))
+    out_buf = ctx.act(out_buf, ("model", None, None))
+
+    back = jnp.take(out_buf.reshape(e * capacity, d), slot, axis=0,
+                    mode="clip")  # dropped slots are OOB; weight==0 below
+    back = ctx.act(back, ("model", None))
+    w = jnp.take(top_p.reshape(-1), perm) * keep
+    contrib = back * w[:, None].astype(back.dtype)
+    out = jnp.zeros((t, d), back.dtype).at[tok_of].add(contrib)
+
+    if mo.n_shared:
+        out = out + mlp(p["shared"], xt, "swiglu")
+    return out.reshape(b, s, d), aux
+
+

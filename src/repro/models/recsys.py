@@ -1,0 +1,204 @@
+"""RecSys models: DeepFM / DCN-v2 / xDeepFM / two-tower retrieval.
+
+The hot path is the embedding lookup over huge tables. JAX has no
+EmbeddingBag: it is built here from ``jnp.take`` + segment ops (taxonomy
+§RecSys), with a model-parallel shard_map variant in
+``repro.distributed.embedding`` (row-sharded tables, psum combine) and a
+Pallas TPU kernel in ``repro.kernels.embedding_bag``.
+
+All 39/26 sparse fields share one combined table (row offset per field)
+so the lookup is a single gather from one row-sharded array.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RecsysConfig
+from repro.models.layers import dense, dense_init
+
+Params = Dict[str, jnp.ndarray]
+
+
+def table_rows(cfg: RecsysConfig) -> int:
+    return cfg.n_sparse * cfg.rows_per_field
+
+
+def field_offsets(cfg: RecsysConfig) -> jnp.ndarray:
+    return (jnp.arange(cfg.n_sparse, dtype=jnp.int32)
+            * cfg.rows_per_field)
+
+
+def embedding_lookup(table: jnp.ndarray, ids: jnp.ndarray,
+                     cfg: RecsysConfig) -> jnp.ndarray:
+    """ids (B, F) field-local -> (B, F, D) via one combined-table gather."""
+    flat = ids + field_offsets(cfg)[None, :]
+    return jnp.take(table, flat, axis=0)
+
+
+def _mlp_init(key, dims: Tuple[int, ...]) -> Params:
+    ks = jax.random.split(key, len(dims) - 1)
+    return {f"l{i}": dense_init(ks[i], dims[i], dims[i + 1], bias=True)
+            for i in range(len(dims) - 1)}
+
+
+def _mlp_apply(p: Params, x: jnp.ndarray, *, final_act: bool = False
+               ) -> jnp.ndarray:
+    n = len(p)
+    for i in range(n):
+        x = dense(p[f"l{i}"], x, dtype=jnp.float32)
+        if i < n - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# init / forward per interaction type
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: RecsysConfig, key) -> Params:
+    ks = jax.random.split(key, 8)
+    rows = table_rows(cfg)
+    p: Params = {
+        "table": jax.random.normal(ks[0], (rows, cfg.embed_dim),
+                                   jnp.float32) * 0.01,
+    }
+    d_emb = cfg.n_sparse * cfg.embed_dim
+    d_in = cfg.n_dense + d_emb
+    if cfg.interaction == "fm":
+        p["linear_table"] = jax.random.normal(ks[1], (rows, 1),
+                                              jnp.float32) * 0.01
+        p["mlp"] = _mlp_init(ks[2], (d_in,) + cfg.mlp + (1,))
+    elif cfg.interaction == "cross":
+        for i in range(cfg.n_cross_layers):
+            p[f"cross_w{i}"] = dense_init(ks[2 + i % 4], d_in, d_in,
+                                          bias=True)
+        p["mlp"] = _mlp_init(ks[6], (d_in,) + cfg.mlp + (1,))
+    elif cfg.interaction == "cin":
+        f0 = cfg.n_sparse
+        prev = f0
+        for i, hk in enumerate(cfg.cin_layers):
+            p[f"cin_w{i}"] = jax.random.normal(
+                jax.random.fold_in(ks[2], i), (hk, prev, f0),
+                jnp.float32) * (1.0 / np.sqrt(prev * f0))
+            prev = hk
+        p["cin_out"] = dense_init(ks[3], sum(cfg.cin_layers), 1, bias=True)
+        p["mlp"] = _mlp_init(ks[4], (d_in,) + cfg.mlp + (1,))
+    elif cfg.interaction == "dot":     # two-tower
+        d_feat = (cfg.n_sparse // 2) * cfg.embed_dim
+        p["user_mlp"] = _mlp_init(ks[2], (d_feat,) + cfg.tower_mlp)
+        p["item_mlp"] = _mlp_init(ks[3], (d_feat,) + cfg.tower_mlp)
+    else:
+        raise ValueError(cfg.interaction)
+    return p
+
+
+def forward(cfg: RecsysConfig, params: Params,
+            batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """CTR models -> (B,) logit. Two-tower handled separately."""
+    emb = embedding_lookup(params["table"], batch["sparse"], cfg)  # (B,F,D)
+    b = emb.shape[0]
+    flat = emb.reshape(b, -1)
+    x0 = jnp.concatenate([batch["dense"], flat], axis=1) \
+        if cfg.n_dense else flat
+
+    if cfg.interaction == "fm":
+        lin = embedding_lookup(params["linear_table"], batch["sparse"],
+                               dataclass_like(cfg)).sum(axis=(1, 2))
+        sv = emb.sum(axis=1)                         # (B, D)
+        fm = 0.5 * jnp.sum(sv * sv - jnp.sum(emb * emb, axis=1), axis=1)
+        deep = _mlp_apply(params["mlp"], x0)[:, 0]
+        return lin + fm + deep
+    if cfg.interaction == "cross":
+        x = x0
+        for i in range(cfg.n_cross_layers):
+            xw = dense(params[f"cross_w{i}"], x, dtype=jnp.float32)
+            x = x0 * xw + x
+        return _mlp_apply(params["mlp"], x)[:, 0]
+    if cfg.interaction == "cin":
+        xk = emb                                      # (B, Hk, D)
+        outs = []
+        for i in range(len(cfg.cin_layers)):
+            z = jnp.einsum("bhd,bfd->bhfd", xk, emb)
+            xk = jnp.einsum("bhfd,ohf->bod", z, params[f"cin_w{i}"])
+            outs.append(xk.sum(-1))                   # (B, Hk)
+        cin = dense(params["cin_out"], jnp.concatenate(outs, 1),
+                    dtype=jnp.float32)[:, 0]
+        deep = _mlp_apply(params["mlp"], x0)[:, 0]
+        return cin + deep
+    raise ValueError(cfg.interaction)
+
+
+def dataclass_like(cfg: RecsysConfig) -> RecsysConfig:
+    """cfg clone whose embed dim matches the 1-wide linear table."""
+    import dataclasses
+    return dataclasses.replace(cfg, embed_dim=1)
+
+
+def loss_fn(cfg: RecsysConfig, params: Params,
+            batch: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, Dict]:
+    if cfg.interaction == "dot":
+        return two_tower_loss(cfg, params, batch)
+    logit = forward(cfg, params, batch)
+    y = batch["label"]
+    loss = jnp.mean(jnp.maximum(logit, 0) - logit * y +
+                    jnp.log1p(jnp.exp(-jnp.abs(logit))))
+    return loss, {"logit_mean": logit.mean()}
+
+
+# ---------------------------------------------------------------------------
+# two-tower retrieval
+# ---------------------------------------------------------------------------
+
+
+def tower_embeddings(cfg: RecsysConfig, params: Params,
+                     batch: Dict[str, jnp.ndarray]
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    half = cfg.n_sparse // 2
+    emb = embedding_lookup(params["table"], batch["sparse"], cfg)
+    b = emb.shape[0]
+    u = _mlp_apply(params["user_mlp"], emb[:, :half].reshape(b, -1))
+    v = _mlp_apply(params["item_mlp"], emb[:, half:].reshape(b, -1))
+    u = u / jnp.maximum(jnp.linalg.norm(u, axis=1, keepdims=True), 1e-6)
+    v = v / jnp.maximum(jnp.linalg.norm(v, axis=1, keepdims=True), 1e-6)
+    return u, v
+
+
+def two_tower_loss(cfg: RecsysConfig, params: Params,
+                   batch: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, Dict]:
+    """In-batch sampled softmax (RecSys'19) with temperature."""
+    u, v = tower_embeddings(cfg, params, batch)
+    logits = (u @ v.T) / 0.05                        # (B, B)
+    labels = jnp.arange(u.shape[0])
+    lse = jax.nn.logsumexp(logits, axis=1)
+    loss = jnp.mean(lse - jnp.diag(logits))
+    acc = jnp.mean(jnp.argmax(logits, 1) == labels)
+    return loss, {"acc": acc}
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def score_candidates(user_emb: jnp.ndarray, cand_emb: jnp.ndarray,
+                     k: int = 100) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """retrieval_cand brute-force path: (Q,D)x(C,D) -> top-k.
+
+    The IVF early-exit path for the same cell lives in
+    ``repro.core.ivf.search`` — the paper's technique applied to this
+    architecture (DESIGN §4).
+    """
+    scores = user_emb @ cand_emb.T
+    s, i = jax.lax.top_k(scores, k)
+    return s, i.astype(jnp.int32)
+
+
+def serve_logits(cfg: RecsysConfig, params: Params,
+                 batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Pointwise online/offline scoring (serve_p99 / serve_bulk)."""
+    if cfg.interaction == "dot":
+        u, v = tower_embeddings(cfg, params, batch)
+        return jnp.sum(u * v, axis=1)
+    return forward(cfg, params, batch)

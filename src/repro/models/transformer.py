@@ -1,0 +1,378 @@
+"""Decoder-only LM: scan-over-layers, GQA/MLA attention, optional MoE.
+
+Entry points used by the launcher / dry-run:
+  init_params(cfg, key)          -> pytree (fp32 master weights)
+  loss_fn(cfg, params, batch)    -> scalar loss (train_step lowers this)
+  prefill(cfg, params, tokens)   -> (last-token logits, KV/MLA cache)
+  decode_step(cfg, params, cache, token, pos) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TransformerConfig
+from repro.distributed.context import act
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models.layers import (cross_entropy_loss, dense, dense_init, mlp,
+                                 mlp_init, rmsnorm, rmsnorm_init)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: TransformerConfig, *, dense_ffn: bool) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"ln1": rmsnorm_init(cfg.d_model),
+                 "ln2": rmsnorm_init(cfg.d_model)}
+    if cfg.attn_type == "mla":
+        p["attn"] = attn.mla_init(ks[0], cfg)
+    else:
+        p["attn"] = attn.gqa_init(ks[0], cfg)
+    if cfg.moe is not None and not dense_ffn:
+        p["moe"] = moe_lib.moe_init(ks[1], cfg)
+    else:
+        d_ff = (cfg.moe.d_ff_dense if (cfg.moe and dense_ffn) else cfg.d_ff)
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, d_ff, cfg.mlp_type)
+    return p
+
+
+def init_params(cfg: TransformerConfig, key) -> Params:
+    p = _init_params_f32(cfg, key)
+    if cfg.param_dtype == "bfloat16":
+        p = jax.tree.map(lambda a: a.astype(jnp.bfloat16)
+                         if a.dtype == jnp.float32 else a, p)
+    return p
+
+
+def _init_params_f32(cfg: TransformerConfig, key) -> Params:
+    ks = jax.random.split(key, 4)
+    n_dense = cfg.moe.first_k_dense if cfg.moe else 0
+    n_scan = cfg.n_layers - n_dense
+    layer_keys = jax.random.split(ks[0], n_scan)
+    stacked = jax.vmap(
+        lambda k: _layer_init(k, cfg, dense_ffn=False))(layer_keys)
+    p: Params = {
+        "embed": jax.random.normal(ks[1], (cfg.vocab_size, cfg.d_model),
+                                   jnp.float32) * 0.02,
+        "ln_f": rmsnorm_init(cfg.d_model),
+        "layers": stacked,
+    }
+    for i in range(n_dense):
+        p[f"dense_layer_{i}"] = _layer_init(
+            jax.random.fold_in(ks[2], i), cfg, dense_ffn=True)
+    if not cfg.tie_embeddings:
+        p["out"] = dense_init(ks[3], cfg.d_model, cfg.vocab_size)
+    return p
+
+
+def abstract_params(cfg: TransformerConfig) -> Params:
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _block(cfg: TransformerConfig, lp: Params, x: jnp.ndarray,
+           positions: jnp.ndarray, *, dense_ffn: bool
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a = attn.mla_forward(lp["attn"], h, cfg, positions)
+    else:
+        a = attn.gqa_forward(lp["attn"], h, cfg, positions)
+    x = x + a
+    x = act(x, ("dp", "model", None), bf16_cotangent=True)
+    h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in lp and not dense_ffn:
+        f, aux = moe_lib.moe_forward(lp["moe"], h, cfg)
+    else:
+        f = mlp(lp["mlp"], h, cfg.mlp_type)
+    return act(x + f, ("dp", "model", None), bf16_cotangent=True), aux
+
+
+def forward_hidden(cfg: TransformerConfig, params: Params,
+                   tokens: jnp.ndarray, *, remat: bool = False,
+                   unroll: bool = False
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B,S) -> (final hidden (B,S,d) post-norm, aux loss)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    x = act(x, ("dp", "model", None))
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    aux_total = jnp.zeros((), jnp.float32)
+    n_dense = cfg.moe.first_k_dense if cfg.moe else 0
+    for i in range(n_dense):
+        x, aux = _block(cfg, params[f"dense_layer_{i}"], x, positions,
+                        dense_ffn=True)
+        aux_total = aux_total + aux
+
+    block = functools.partial(_block, cfg, positions=positions,
+                              dense_ffn=False)
+    policy = (jax.checkpoint_policies.dots_saveable
+              if cfg.remat_policy == "dots"
+              else jax.checkpoint_policies.nothing_saveable)
+    body = (jax.checkpoint(lambda lp, x: block(lp, x), policy=policy)
+            if remat else (lambda lp, x: block(lp, x)))
+
+    def scan_fn(carry, lp):
+        x, aux_sum = carry
+        x, aux = body(lp, x)
+        return (x, aux_sum + aux), None
+
+    (x, aux_total), _ = jax.lax.scan(scan_fn, (x, aux_total),
+                                     params["layers"], unroll=unroll)
+    return rmsnorm(params["ln_f"], x, cfg.norm_eps), aux_total
+
+
+def forward(cfg: TransformerConfig, params: Params, tokens: jnp.ndarray,
+            *, remat: bool = False, unroll: bool = False
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B,S) -> (logits f32 (B,S,V), total aux loss). Test /
+    small-scale path; training uses loss_fn's chunked CE instead."""
+    x, aux_total = forward_hidden(cfg, params, tokens, remat=remat,
+                                  unroll=unroll)
+    return _head_logits(cfg, params, x), aux_total
+
+
+def _head_logits(cfg: TransformerConfig, params: Params, x: jnp.ndarray
+                 ) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return x.astype(jnp.float32) @ params["embed"].T
+    return dense(params["out"], x, dtype=jnp.float32)
+
+
+def loss_fn(cfg: TransformerConfig, params: Params,
+            batch: Dict[str, jnp.ndarray], *, unroll: bool = False,
+            ce_chunk: int = 512) -> Tuple[jnp.ndarray, Dict]:
+    """Chunked cross-entropy: the (B, S, V) logits tensor is never
+    materialised — the head matmul + CE run per (B, ce_chunk) token
+    slab under remat (peak extra memory = B * ce_chunk * V / shards)."""
+    hidden, aux = forward_hidden(cfg, params, batch["tokens"], remat=True,
+                                 unroll=unroll)
+    b, s, _ = hidden.shape
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    chunk = min(ce_chunk, s)
+    n_chunks = s // chunk if s % chunk == 0 else 1
+    if s % chunk != 0:
+        chunk = s
+
+    hc = hidden.reshape(b, n_chunks, chunk, -1).swapaxes(0, 1)
+    lc = jnp.maximum(labels, 0).reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    mc = mask.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk_nll(xc, labc, mkc):
+        logits = _head_logits(cfg, params, xc)
+        logits = act(logits, ("dp", None, "model"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mkc)
+
+    def scan_fn(carry, inp):
+        xc, labc, mkc = inp
+        return carry + chunk_nll(xc, labc, mkc), None
+
+    total, _ = jax.lax.scan(scan_fn, jnp.zeros((), jnp.float32),
+                            (hc, lc, mc), unroll=unroll)
+    ce = total / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+class LMCache:
+    """KV cache container; ``kind`` ("gqa"|"gqa8"|"mla") rides in pytree
+    aux-data, ``data`` are the stacked (L, ...) cache arrays."""
+
+    def __init__(self, kind: str, data: Tuple[jnp.ndarray, ...]):
+        self.kind = kind
+        self.data = tuple(data)
+
+    def __repr__(self):
+        return f"LMCache({self.kind}, {[a.shape for a in self.data]})"
+
+
+jax.tree_util.register_pytree_node(
+    LMCache, lambda c: (c.data, c.kind),
+    lambda kind, children: LMCache(kind, tuple(children)))
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int) -> LMCache:
+    if cfg.attn_type == "mla":
+        c = attn.init_mla_cache(cfg, batch, max_seq)
+        return LMCache("mla", (c.ckv, c.k_rope))
+    c = attn.init_kv_cache(cfg, batch, max_seq)
+    if c.k_scale is not None:
+        return LMCache("gqa8", (c.k, c.v, c.k_scale, c.v_scale))
+    return LMCache("gqa", (c.k, c.v))
+
+
+def abstract_cache(cfg: TransformerConfig, batch: int, max_seq: int
+                   ) -> LMCache:
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, max_seq))
+
+
+def prefill(cfg: TransformerConfig, params: Params, tokens: jnp.ndarray,
+            max_seq: Optional[int] = None, *, unroll: bool = False
+            ) -> Tuple[jnp.ndarray, LMCache]:
+    """Process the prompt; return last-position logits + a cache of
+    length max_seq (default: prompt length)."""
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    n_dense = cfg.moe.first_k_dense if cfg.moe else 0
+
+    def run_layer(lp, x, dense_ffn):
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        if cfg.attn_type == "mla":
+            m = cfg.mla
+            q_nope, q_rope, ckv, k_rope = attn._mla_qkv(lp["attn"], h, cfg,
+                                                        positions)
+            a = attn.mla_forward(lp["attn"], h, cfg, positions)
+            kv_out = (_pad_seq(ckv, max_seq),
+                      _pad_seq(k_rope[:, :, 0, :], max_seq))
+        else:
+            a = attn.gqa_forward(lp["attn"], h, cfg, positions)
+            hd, kv = cfg.head_dim(), cfg.n_kv_heads
+            k = dense(lp["attn"]["wk"], h).reshape(b, s, kv, hd)
+            v = dense(lp["attn"]["wv"], h).reshape(b, s, kv, hd)
+            k = attn.apply_rope(k, positions, cfg.rope_theta)
+            if cfg.kv_cache_dtype == "int8":
+                kq, ks_ = attn.quantize_kv(k)
+                vq, vs_ = attn.quantize_kv(v)
+                kv_out = (_pad_seq(kq, max_seq), _pad_seq(vq, max_seq),
+                          _pad_seq(ks_, max_seq), _pad_seq(vs_, max_seq))
+            else:
+                kv_out = (_pad_seq(k.astype(jnp.bfloat16), max_seq),
+                          _pad_seq(v.astype(jnp.bfloat16), max_seq))
+        x = x + a
+        h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if "moe" in lp and not dense_ffn:
+            f, _ = moe_lib.moe_forward(lp["moe"], h2, cfg)
+        else:
+            f = mlp(lp["mlp"], h2, cfg.mlp_type)
+        return x + f, kv_out
+
+    dense_caches = []
+    for i in range(n_dense):
+        x, kv_out = run_layer(params[f"dense_layer_{i}"], x, True)
+        dense_caches.append(kv_out)
+
+    def scan_fn(x, lp):
+        x, kv_out = run_layer(lp, x, False)
+        return x, kv_out
+
+    x, scan_caches = jax.lax.scan(scan_fn, x, params["layers"],
+                                  unroll=unroll)
+    caches = scan_caches
+    if dense_caches:
+        stacked_dense = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                     *dense_caches) \
+            if len(dense_caches) > 1 else \
+            jax.tree.map(lambda a: a[None], dense_caches[0])
+        caches = jax.tree.map(lambda d, sc: jnp.concatenate([d, sc], 0),
+                              stacked_dense, scan_caches)
+    x = rmsnorm(params["ln_f"], x[:, -1:, :], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x.astype(jnp.float32) @ params["embed"].T
+    else:
+        logits = dense(params["out"], x, dtype=jnp.float32)
+    kind = ("mla" if cfg.attn_type == "mla"
+            else ("gqa8" if cfg.kv_cache_dtype == "int8" else "gqa"))
+    return logits[:, 0], LMCache(kind, tuple(caches))
+
+
+def _pad_seq(x: jnp.ndarray, max_seq: int) -> jnp.ndarray:
+    s = x.shape[1]
+    if s == max_seq:
+        return x
+    pad = [(0, 0), (0, max_seq - s)] + [(0, 0)] * (x.ndim - 2)
+    return jnp.pad(x, pad)
+
+
+def decode_step(cfg: TransformerConfig, params: Params, cache: LMCache,
+                token: jnp.ndarray, pos: jnp.ndarray, *,
+                unroll: bool = False) -> Tuple[jnp.ndarray, LMCache]:
+    """token (B,1) int32, pos () int32 -> (logits (B,V), new cache)."""
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0).astype(jnp.bfloat16)
+    n_dense = cfg.moe.first_k_dense if cfg.moe else 0
+
+    def run_layer(lp, x, layer_cache, dense_ffn):
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        if cfg.attn_type == "mla":
+            a, new_cache = attn.mla_decode(lp["attn"], h, cfg, layer_cache,
+                                           pos)
+        else:
+            a, new_cache = attn.gqa_decode(lp["attn"], h, cfg,
+                                           _with_scales(layer_cache), pos)
+            new_cache = tuple(c for c in new_cache if c is not None)
+        x = x + a
+        h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if "moe" in lp and not dense_ffn:
+            f, _ = moe_lib.moe_forward(lp["moe"], h2, cfg)
+        else:
+            f = mlp(lp["mlp"], h2, cfg.mlp_type)
+        return x + f, new_cache
+
+    data = cache.data
+    new_data = []
+    if n_dense:
+        head = tuple(a[:n_dense] for a in data)
+        tail = tuple(a[n_dense:] for a in data)
+        for i in range(n_dense):
+            lc = tuple(a[i] for a in head)
+            x, nc = run_layer(params[f"dense_layer_{i}"], x, lc, True)
+            new_data.append(nc)
+    else:
+        tail = data
+
+    def scan_fn(x, inp):
+        lp, lc = inp
+        x, nc = run_layer(lp, x, lc, False)
+        return x, nc
+
+    x, scan_out = jax.lax.scan(scan_fn, x, (params["layers"], tail),
+                               unroll=unroll)
+    if new_data:
+        dense_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *new_data) \
+            if len(new_data) > 1 else \
+            jax.tree.map(lambda a: a[None], new_data[0])
+        merged = tuple(jnp.concatenate([d, s_], 0)
+                       for d, s_ in zip(dense_stack, scan_out))
+    else:
+        merged = tuple(scan_out)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x.astype(jnp.float32) @ params["embed"].T
+    else:
+        logits = dense(params["out"], x, dtype=jnp.float32)
+    return logits[:, 0], LMCache(cache.kind, merged)
+
+
+def _with_scales(layer_cache):
+    if len(layer_cache) == 4:
+        return layer_cache
+    k, v = layer_cache
+    return (k, v, None, None)

@@ -1,0 +1,159 @@
+"""Optimizers (optax-style pure transforms, no external deps).
+
+AdamW keeps fp32 moments sharded identically to the params (ZeRO-3-like
+under the FSDP rules in ``repro.distributed.sharding``). Adafactor is
+provided for memory-tight cells (factored second moment).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree, jnp.ndarray], Tuple[Pytree, Pytree]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2)
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> Pytree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+
+def adamw(lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.01, max_grad_norm: float = 1.0
+          ) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"mu": z, "nu": jax.tree.map(jnp.zeros_like, z)}
+
+    def update(grads, state, params, step):
+        grads = clip_by_global_norm(grads, max_grad_norm)
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / bc1
+            vh = v / bc2
+            step_ = lr_t * (mh / (jnp.sqrt(vh) + eps) + weight_decay
+                            * p.astype(jnp.float32))
+            return (p.astype(jnp.float32) - step_).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"mu": new_m, "nu": new_v}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+              decay: float = 0.8, eps: float = 1e-30,
+              max_grad_norm: float = 1.0) -> Optimizer:
+    """Factored second moment for >=2D params (memory ~ sum of dims)."""
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init(params):
+        def st(p):
+            if p.ndim >= 2:
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                       jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return jax.tree.map(st, params)
+
+    def update(grads, state, params, step):
+        grads = clip_by_global_norm(grads, max_grad_norm)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                r = beta * s["r"] + (1 - beta) * g2.mean(-1)
+                c = beta * s["c"] + (1 - beta) * g2.mean(-2)
+                denom = (r[..., None] * c[..., None, :]
+                         / jnp.maximum(r.mean(-1, keepdims=True)[..., None],
+                                       eps))
+                u = g / jnp.sqrt(denom + eps)
+                ns = {"r": r, "c": c}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g / jnp.sqrt(v + eps)
+                ns = {"v": v}
+            # update clipping (Shazeer & Stern)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), ns
+
+        out = jax.tree.map(upd, grads, state, params,
+                           is_leaf=lambda x: isinstance(x, dict)
+                           and ("r" in x or "v" in x))
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_s = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, new_s
+
+    return Optimizer(init, update)
+
+
+def sgdm(lr: float, momentum: float = 0.9,
+         max_grad_norm: float = 0.0) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params, step):
+        if max_grad_norm:
+            grads = clip_by_global_norm(grads, max_grad_norm)
+
+        def upd(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+        out = jax.tree.map(upd, grads, state, params)
+        return (jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple)),
+                jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple)))
+
+    return Optimizer(init, update)
+
+
+def warmup_cosine(peak: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * (step + 1) / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 *
+                      (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return fn

@@ -1,0 +1,34 @@
+"""Elastic scaling: checkpoints are mesh-agnostic (global arrays +
+PartitionSpecs), so a job restarted on a different device count reshards
+on restore. This module computes the new shardings and performs the
+re-placement."""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointManager
+
+Pytree = Any
+
+
+def remesh(n_devices: int, *, model_parallel: int,
+           axis_names: Tuple[str, ...] = ("data", "model")) -> Mesh:
+    """Build the largest (data, model) mesh fitting n_devices."""
+    if n_devices % model_parallel:
+        raise ValueError(f"{n_devices} devices not divisible by "
+                         f"model_parallel={model_parallel}")
+    shape = (n_devices // model_parallel, model_parallel)
+    return jax.make_mesh(shape, axis_names,
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def elastic_restore(ckpt: CheckpointManager, template: Pytree,
+                    new_mesh: Mesh, pspecs: Pytree,
+                    step: Optional[int] = None) -> Tuple[int, Pytree]:
+    """Restore a checkpoint onto a *different* mesh (scale up/down)."""
+    shardings = jax.tree.map(lambda s: NamedSharding(new_mesh, s), pspecs,
+                             is_leaf=lambda x: isinstance(x, P))
+    return ckpt.restore(template, step=step, shardings=shardings)

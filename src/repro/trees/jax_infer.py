@@ -1,0 +1,98 @@
+"""Tree-ensemble inference in JAX: level-wise gather descent.
+
+LightGBM-style additive forests become five stacked arrays; prediction
+is ``max_depth`` rounds of vectorised child selection — no
+data-dependent control flow, so the ensemble runs *inside* the jitted
+A-kNN search loop (DESIGN §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TreeEnsemble:
+    feat: jnp.ndarray    # (T, M) int32 split feature, -1 at leaves
+    thresh: jnp.ndarray  # (T, M) f32 split threshold
+    left: jnp.ndarray    # (T, M) int32 child if x[f] <= thr (self at leaf)
+    right: jnp.ndarray   # (T, M) int32
+    value: jnp.ndarray   # (T, M) f32 leaf value (lr folded in), 0 inner
+    base: jnp.ndarray    # () f32 initial prediction
+    max_depth: int       # static
+
+    def tree_flatten(self):
+        return ((self.feat, self.thresh, self.left, self.right, self.value,
+                 self.base), self.max_depth)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, aux)
+
+    @property
+    def n_trees(self) -> int:
+        return self.feat.shape[0]
+
+
+def predict_margin(ens: TreeEnsemble, x: jnp.ndarray) -> jnp.ndarray:
+    """(B, F) -> (B,) raw margin (sum of leaf values + base)."""
+    t, m = ens.feat.shape
+    b = x.shape[0]
+    flat_feat = ens.feat.reshape(-1)
+    flat_thr = ens.thresh.reshape(-1)
+    flat_l = ens.left.reshape(-1)
+    flat_r = ens.right.reshape(-1)
+    flat_v = ens.value.reshape(-1)
+    toff = (jnp.arange(t, dtype=jnp.int32) * m)[None, :]        # (1, T)
+    node = jnp.zeros((b, t), jnp.int32)
+
+    def step(node, _):
+        gidx = toff + node                                       # (B, T)
+        f = jnp.take(flat_feat, gidx)
+        thr = jnp.take(flat_thr, gidx)
+        xv = jnp.take_along_axis(x, jnp.maximum(f, 0), axis=1)
+        go_left = xv <= thr
+        nxt = jnp.where(go_left, jnp.take(flat_l, gidx),
+                        jnp.take(flat_r, gidx))
+        node = jnp.where(f >= 0, nxt, node)                      # leaves stay
+        return node, None
+
+    node, _ = jax.lax.scan(step, node, None, length=ens.max_depth)
+    vals = jnp.take(flat_v, toff + node)
+    return jnp.sum(vals, axis=1) + ens.base
+
+
+def predict_proba(ens: TreeEnsemble, x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.sigmoid(predict_margin(ens, x))
+
+
+def from_numpy_forest(forest, max_depth: int) -> TreeEnsemble:
+    """Pack ``repro.trees.gbdt.Forest`` into stacked device arrays."""
+    m = max(t.feat.shape[0] for t in forest.trees)
+    t = len(forest.trees)
+
+    def pad(a, fill, dtype):
+        out = np.full((t, m), fill, dtype)
+        for i, tree in enumerate(forest.trees):
+            arr = getattr(tree, a)
+            out[i, : arr.shape[0]] = arr
+        return out
+
+    # leaves self-loop so extra descent steps are no-ops
+    left = pad("left", 0, np.int32)
+    right = pad("right", 0, np.int32)
+    feat = pad("feat", -1, np.int32)
+    for i, tree in enumerate(forest.trees):
+        leaves = np.nonzero(tree.feat == -1)[0]
+        left[i, leaves] = leaves
+        right[i, leaves] = leaves
+    return TreeEnsemble(
+        jnp.asarray(feat), jnp.asarray(pad("thresh", 0.0, np.float32)),
+        jnp.asarray(left), jnp.asarray(right),
+        jnp.asarray(pad("value", 0.0, np.float32)),
+        jnp.asarray(np.float32(forest.base)), max_depth)

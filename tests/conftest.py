@@ -1,0 +1,28 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests run on the
+single real CPU device; multi-device tests spawn subprocesses."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import build_index, brute_force
+from repro.data.synthetic import clustered_corpus
+
+
+@pytest.fixture(scope="session")
+def tiny_corpus():
+    return clustered_corpus(n_docs=8000, dim=24, n_components=64,
+                            n_queries=256, seed=7)
+
+
+@pytest.fixture(scope="session")
+def tiny_index(tiny_corpus):
+    return build_index(tiny_corpus.docs, 64, list_pad=256, n_iters=4,
+                       seed=0)
+
+
+@pytest.fixture(scope="session")
+def tiny_exact(tiny_corpus):
+    s, i = brute_force(jnp.asarray(tiny_corpus.docs),
+                       jnp.asarray(tiny_corpus.queries), 10)
+    return np.asarray(s), np.asarray(i)

@@ -1,0 +1,87 @@
+"""HLO collective parser + config registry invariants."""
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, list_archs, reduced, shape_for
+from repro.launch.hlo_analysis import (parse_collectives, roofline_terms,
+                                       _shape_bytes)
+
+
+def test_parse_collectives_basic():
+    txt = """
+  %ag = bf16[2048,512]{1,0} all-gather(%p0), replica_groups={...}
+  %ar = f32[128]{0} all-reduce(%x), to_apply=%add
+  %ignored = f32[4]{0} add(%a, %b)
+  %agd = bf16[64]{0} all-gather-done(%ags)
+  %rs = f32[256,16]{1,0} reduce-scatter(%y), dimensions={0}
+"""
+    st = parse_collectives(txt)
+    assert st.bytes_by_kind["all-gather"] == 2048 * 512 * 2
+    assert st.bytes_by_kind["all-reduce"] == 128 * 4
+    assert st.bytes_by_kind["reduce-scatter"] == 256 * 16 * 4
+    assert st.count_by_kind["all-gather"] == 1   # -done not re-counted
+
+
+def test_parse_tuple_all_reduce():
+    txt = ("  %t = (f32[8]{0}, bf16[16]{0}) all-reduce(%a, %b), "
+           "to_apply=%add\n")
+    st = parse_collectives(txt)
+    assert st.bytes_by_kind["all-reduce"] == 8 * 4 + 16 * 2
+
+
+def test_roofline_terms_bottleneck():
+    t = roofline_terms(flops=197e12, hbm_bytes=0, coll_bytes=0)
+    assert t["bottleneck"] == "compute_s"
+    assert t["compute_s"] == pytest.approx(1.0)
+    t = roofline_terms(flops=0, hbm_bytes=819e9, coll_bytes=1e9)
+    assert t["bottleneck"] == "memory_s"
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16", "4,4") == 32
+    assert _shape_bytes("pred", "10") == 10
+    assert _shape_bytes("f32", "") == 4     # scalar
+
+
+# --- configs -----------------------------------------------------------------
+
+def test_registry_covers_assignment():
+    archs = list_archs()
+    for a in ["minicpm3-4b", "qwen1.5-32b", "starcoder2-3b",
+              "deepseek-moe-16b", "dbrx-132b", "gat-cora", "deepfm",
+              "dcn-v2", "two-tower-retrieval", "xdeepfm", "msmarco-ivf"]:
+        assert a in archs
+
+
+def test_assigned_cell_count():
+    """5 LM x 4 + 1 GNN x 4 + 4 recsys x 4 = 40 assigned cells."""
+    n = 0
+    for a in list_archs():
+        spec = get_arch(a)
+        if spec.family != "ivf":
+            n += len(spec.shapes)
+    assert n == 40
+
+
+@pytest.mark.parametrize("arch,expect_b", [
+    ("dbrx-132b", 131.6), ("deepseek-moe-16b", 16.4),
+    ("minicpm3-4b", 4.1), ("qwen1.5-32b", 35.2),
+    ("starcoder2-3b", 3.0)])
+def test_param_counts(arch, expect_b):
+    got = get_arch(arch).model.param_count() / 1e9
+    assert got == pytest.approx(expect_b, rel=0.05)
+
+
+def test_reduced_configs_are_small():
+    for a in list_archs():
+        r = reduced(get_arch(a))
+        if r.family == "lm":
+            assert r.model.param_count() < 5e6
+        if r.family == "ivf":
+            assert r.model.n_docs <= 10_000
+
+
+def test_shape_lookup_errors():
+    spec = get_arch("gat-cora")
+    with pytest.raises(KeyError):
+        shape_for(spec, "nope")

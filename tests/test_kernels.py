@@ -1,0 +1,104 @@
+"""Pallas kernels vs jnp oracles: shape/dtype sweeps (deliverable c)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("s,hd,blk", [(128, 64, 64), (256, 64, 128),
+                                      (256, 128, 64), (512, 32, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(s, hd, blk, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (2, s, hd), dtype)
+    k = jax.random.normal(k2, (2, s, hd), dtype)
+    v = jax.random.normal(k3, (2, s, hd), dtype)
+    out = ops.flash_attention(q, k, v, blk_q=blk, blk_k=blk)
+    exp = ref.flash_attention_ref(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_non_causal():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(k1, (2, 128, 32))
+    k = jax.random.normal(k2, (2, 128, 32))
+    v = jax.random.normal(k3, (2, 128, 32))
+    out = ops.flash_attention(q, k, v, causal=False, blk_q=64, blk_k=64)
+    exp = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("d,lp,blk", [(32, 128, 64), (64, 256, 64),
+                                      (16, 64, 64)])
+def test_ivf_scan_sweep(d, lp, blk):
+    rng = np.random.default_rng(0)
+    docs = jnp.asarray(rng.normal(0, 1, (1024, d)).astype(np.float32))
+    q = jnp.asarray(rng.normal(0, 1, (6, d)).astype(np.float32))
+    offsets = jnp.asarray(
+        (rng.integers(0, (1024 - lp) // blk, 6) * blk).astype(np.int32))
+    sizes = jnp.asarray(rng.integers(0, lp + 1, 6).astype(np.int32))
+    out = ops.ivf_scan(q, docs, offsets, sizes, list_pad=lp, blk_l=blk)
+    exp = ref.ivf_scan_ref(q, docs, offsets, sizes, lp)
+    finite = np.isfinite(np.asarray(exp))
+    assert (np.isfinite(np.asarray(out)) == finite).all()
+    np.testing.assert_allclose(np.asarray(out)[finite],
+                               np.asarray(exp)[finite], rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("k,l,b", [(8, 24, 4), (16, 48, 8), (10, 100, 3),
+                                   (100, 256, 2)])
+def test_topk_merge_sweep(k, l, b):
+    rng = np.random.default_rng(1)
+    s = jnp.asarray(rng.normal(0, 1, (b, k)).astype(np.float32))
+    i = jnp.asarray(rng.integers(0, 10_000, (b, k)).astype(np.int32))
+    ns = jnp.asarray(rng.normal(0, 1, (b, l)).astype(np.float32))
+    ni = jnp.asarray(rng.integers(10_000, 20_000, (b, l)).astype(np.int32))
+    os_, oi_ = ops.topk_merge(s, i, ns, ni, k)
+    es, ei = ref.topk_merge_ref(s, i, ns, ni, k)
+    np.testing.assert_allclose(np.asarray(os_), np.asarray(es),
+                               rtol=1e-6)
+    # ids must agree except where scores tie (random floats: no ties)
+    assert (np.asarray(oi_) == np.asarray(ei)).all()
+
+
+def test_topk_merge_with_neg_inf():
+    s = jnp.asarray([[-np.inf, -np.inf]], jnp.float32)
+    i = jnp.asarray([[-1, -1]], jnp.int32)
+    ns = jnp.asarray([[1.0, 2.0, 0.5]], jnp.float32)
+    ni = jnp.asarray([[7, 8, 9]], jnp.int32)
+    os_, oi_ = ops.topk_merge(s, i, ns, ni, 2)
+    assert oi_.tolist() == [[8, 7]]
+
+
+@pytest.mark.parametrize("r,d,b,f", [(50, 8, 4, 3), (200, 16, 8, 5),
+                                     (1000, 32, 2, 10)])
+def test_embedding_bag_sweep(r, d, b, f):
+    rng = np.random.default_rng(2)
+    table = jnp.asarray(rng.normal(0, 1, (r, d)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, r, (b, f)).astype(np.int32))
+    out = ops.embedding_bag(table, ids)
+    exp = ref.embedding_bag_ref(table, ids)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ragged_embedding_bag_oracle():
+    """The take+segment_sum EmbeddingBag construction (taxonomy §RecSys)."""
+    from repro.distributed.embedding import embedding_bag
+    rng = np.random.default_rng(3)
+    table = jnp.asarray(rng.normal(0, 1, (40, 6)).astype(np.float32))
+    ids = jnp.asarray([0, 1, 2, 5, 5, 7, 39], jnp.int32)
+    offsets = jnp.asarray([0, 3, 3, 6, 7], jnp.int32)   # bag1 empty
+    out = embedding_bag(table, ids, offsets)
+    t = np.asarray(table)
+    exp = np.stack([t[[0, 1, 2]].sum(0), np.zeros(6),
+                    t[[5, 5, 7]].sum(0), t[39]])
+    np.testing.assert_allclose(np.asarray(out), exp, rtol=1e-6)

@@ -1,0 +1,103 @@
+"""Optimizers, schedules, data pipeline determinism, serving waves,
+straggler policy."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import (DeterministicBatcher, Prefetcher,
+                                 lm_batcher, pair_batcher)
+from repro.optim.optimizers import (adafactor, adamw, sgdm, warmup_cosine)
+from repro.runtime.straggler import run_waves
+
+
+def _quadratic(opt, steps=60):
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    for i in range(steps):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state = opt.update(grads, state, params, jnp.asarray(i))
+    return float(jnp.max(jnp.abs(params["w"] - target)))
+
+
+def test_adamw_converges():
+    assert _quadratic(adamw(0.1, weight_decay=0.0)) < 0.15
+
+
+def test_adafactor_converges():
+    assert _quadratic(adafactor(0.3), steps=120) < 0.3
+
+
+def test_sgdm_converges():
+    assert _quadratic(sgdm(0.02), steps=120) < 0.1
+
+
+def test_adamw_matches_reference_math():
+    """One AdamW step vs hand computation."""
+    opt = adamw(lr=0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                max_grad_norm=1e9)
+    p = {"w": jnp.asarray([2.0])}
+    s = opt.init(p)
+    g = {"w": jnp.asarray([0.5])}
+    new_p, _ = opt.update(g, s, p, jnp.asarray(0))
+    m = 0.1 * 0.5 / (1 - 0.9)
+    v = 0.01 * 0.25 / (1 - 0.99)
+    expected = 2.0 - 0.1 * (m / (np.sqrt(v) + 1e-8))
+    np.testing.assert_allclose(float(new_p["w"][0]), expected, rtol=1e-5)
+
+
+def test_warmup_cosine_shape():
+    fn = warmup_cosine(1.0, warmup=10, total=100, floor=0.1)
+    vals = [float(fn(jnp.asarray(s))) for s in [0, 9, 10, 50, 99]]
+    assert vals[0] < vals[1] <= 1.0 + 1e-6
+    assert vals[2] == pytest.approx(1.0, abs=0.1)
+    assert vals[-1] == pytest.approx(0.1, abs=0.05)
+    assert vals[3] < vals[2]
+
+
+def test_adafactor_memory_is_factored():
+    opt = adafactor(0.01)
+    p = {"w": jnp.zeros((64, 32))}
+    s = opt.init(p)
+    n_state = sum(np.prod(l.shape) for l in jax.tree.leaves(s))
+    assert n_state == 64 + 32          # vs 2*64*32 for adam
+
+
+def test_batcher_determinism():
+    b = lm_batcher(1000, 4, 16, seed=3)
+    a1 = b.batch(7)
+    a2 = b.batch(7)
+    np.testing.assert_array_equal(a1["tokens"], a2["tokens"])
+    assert not np.array_equal(b.batch(8)["tokens"], a1["tokens"])
+
+
+def test_prefetcher_yields_in_order():
+    b = lm_batcher(100, 2, 4, seed=0)
+    pf = Prefetcher(b, start_step=5, depth=2)
+    steps = [pf.next()[0] for _ in range(4)]
+    pf.close()
+    assert steps == [5, 6, 7, 8]
+
+
+def test_pair_batcher_labels_consistent():
+    docs = np.random.default_rng(0).normal(0, 1, (50, 8)) \
+        .astype(np.float32)
+    b = pair_batcher(docs, batch=16, seed=0)
+    bt = b.batch(0)
+    np.testing.assert_allclose(bt["doc"], docs[bt["doc_id"]])
+
+
+def test_straggler_redispatch_bounds_p99():
+    def lat(rng, shard):
+        # shard 0 is a straggler 30% of the time
+        if shard == 0 and rng.random() < 0.3:
+            return 500.0
+        return float(rng.uniform(5, 20))
+
+    with_rd = run_waves(2000, 8, lat, deadline_ms=50, wave_size=32,
+                        seed=0)
+    assert with_rd.completed == 2000
+    assert with_rd.redispatches > 0
+    assert with_rd.p99_ms < 500.0      # straggler latency never surfaces

@@ -1,0 +1,91 @@
+"""Early-exit policy semantics (paper §2)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import metrics, policies, search
+from repro.core.training import train_policy_models, choose_n_probe
+
+
+def test_patience_exits_early(tiny_index, tiny_corpus):
+    q = jnp.asarray(tiny_corpus.queries)
+    res_f = search(tiny_index, q, policies.fixed(32, k=10, tau=3))
+    res_p = search(tiny_index, q,
+                   policies.patience(32, delta=3, phi=90.0, k=10, tau=3))
+    assert np.asarray(res_p.probes).mean() < \
+        np.asarray(res_f.probes).mean()
+    assert (np.asarray(res_p.probes) >= 1).all()
+    assert (np.asarray(res_p.probes) <= 32).all()
+
+
+def test_patience_delta_monotone(tiny_index, tiny_corpus):
+    """Larger patience -> more probes -> recall never degrades much."""
+    q = jnp.asarray(tiny_corpus.queries)
+    probes = []
+    for delta in (2, 5, 12):
+        res = search(tiny_index, q,
+                     policies.patience(32, delta=delta, phi=90.0, k=10,
+                                       tau=3))
+        probes.append(float(np.asarray(res.probes).mean()))
+    assert probes[0] <= probes[1] <= probes[2]
+
+
+def test_infinite_patience_equals_fixed(tiny_index, tiny_corpus):
+    q = jnp.asarray(tiny_corpus.queries[:64])
+    res_f = search(tiny_index, q, policies.fixed(16, k=10, tau=3))
+    res_p = search(tiny_index, q,
+                   policies.patience(16, delta=99, phi=100.0, k=10,
+                                     tau=3))
+    assert (np.asarray(res_f.topk_ids) == np.asarray(res_p.topk_ids)).all()
+    assert (np.asarray(res_p.probes) == 16).all()
+
+
+@pytest.fixture(scope="module")
+def trained_models(tiny_index, tiny_corpus):
+    qs = tiny_corpus.queries
+    return train_policy_models(
+        tiny_index, tiny_corpus.docs, qs[:128], qs[128:192],
+        n_probe=24, k=10, tau=3, n_trees=10, max_depth=3)
+
+
+def test_reg_policy_runs(tiny_index, tiny_corpus, trained_models,
+                         tiny_exact):
+    q = jnp.asarray(tiny_corpus.queries[192:])
+    pol = policies.regression(24, trained_models.reg,
+                              with_intersections=False, k=10, tau=3)
+    res = search(tiny_index, q, pol)
+    probes = np.asarray(res.probes)
+    assert (probes >= 3).all() and (probes <= 24).all()
+    r = metrics.r_star_at_1(np.asarray(res.topk_ids),
+                            tiny_exact[1][192:, 0])
+    assert r > 0.5
+
+
+def test_classifier_and_cascades(tiny_index, tiny_corpus, trained_models):
+    q = jnp.asarray(tiny_corpus.queries[192:])
+    pols = {
+        "clf": policies.classifier(24, trained_models.clf_weighted,
+                                   k=10, tau=3),
+        "casc_pat": policies.cascade_patience(
+            24, trained_models.clf_weighted, delta=3, phi=90.0, k=10,
+            tau=3),
+        "casc_reg": policies.cascade_regression(
+            24, trained_models.clf_weighted, trained_models.reg_int,
+            k=10, tau=3),
+    }
+    probes = {}
+    for name, pol in pols.items():
+        res = search(tiny_index, q, pol)
+        p = np.asarray(res.probes)
+        assert (p >= 3).all() and (p <= 24).all(), name
+        probes[name] = p.mean()
+    # cascades must not be slower than the pure classifier
+    assert probes["casc_pat"] <= probes["clf"] + 1e-9
+
+
+def test_choose_n_probe(tiny_index, tiny_corpus):
+    n = choose_n_probe(tiny_index, tiny_corpus.docs,
+                       tiny_corpus.queries[:128], rho=0.9, k=10,
+                       n_max=64)
+    assert 1 <= n <= 64

@@ -1,0 +1,111 @@
+"""Property-based tests (hypothesis) over system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ivf import intersection_pct
+from repro.kernels import ops, ref
+from repro.optim.optimizers import clip_by_global_norm, global_norm
+from repro.distributed.collectives import compress_int8, decompress_int8
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 30), st.integers(1, 4),
+       st.integers(0, 2 ** 31 - 1))
+def test_intersection_pct_invariants(k, b, seed):
+    # ids in a result set are unique by construction (clusters are
+    # disjoint); -1 marks empty slots
+    rng = np.random.default_rng(seed)
+    rows = []
+    for _ in range(b):
+        ids = rng.choice(60, size=k, replace=False).astype(np.int32)
+        ids[rng.random(k) < 0.2] = -1
+        rows.append(ids)
+    a = jnp.asarray(np.stack(rows), jnp.int32)
+    val = np.asarray(intersection_pct(a, a))
+    # NOTE: duplicate -1 slots never count (masked), so val <= 100
+    assert (val >= 0).all() and (val <= 100.0 + 1e-6).all()
+    other = jnp.flip(a, axis=1)
+    ab = np.asarray(intersection_pct(a, other))
+    # permutation invariance of the second set
+    np.testing.assert_allclose(ab, val, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 64), st.integers(1, 6),
+       st.integers(0, 2 ** 31 - 1))
+def test_topk_merge_matches_ref(k, l, b, seed):
+    rng = np.random.default_rng(seed)
+    s = jnp.asarray(rng.normal(0, 1, (b, k)).astype(np.float32))
+    i = jnp.asarray(rng.integers(0, 1000, (b, k)).astype(np.int32))
+    ns = jnp.asarray(rng.normal(0, 1, (b, l)).astype(np.float32))
+    ni = jnp.asarray(rng.integers(1000, 2000, (b, l)).astype(np.int32))
+    os_, oi_ = ops.topk_merge(s, i, ns, ni, k)
+    es, ei = ref.topk_merge_ref(s, i, ns, ni, k)
+    np.testing.assert_allclose(np.asarray(os_), np.asarray(es),
+                               rtol=1e-6)
+    assert (np.asarray(oi_) == np.asarray(ei)).all()
+    # output sorted descending
+    assert (np.diff(np.asarray(os_), axis=1) <= 1e-7).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 200), st.floats(0.1, 10.0),
+       st.integers(0, 2 ** 31 - 1))
+def test_clip_by_global_norm(n, max_norm, seed):
+    rng = np.random.default_rng(seed)
+    g = {"a": jnp.asarray(rng.normal(0, 3, (n,)).astype(np.float32)),
+         "b": jnp.asarray(rng.normal(0, 3, (3, 2)).astype(np.float32))}
+    clipped = clip_by_global_norm(g, max_norm)
+    assert float(global_norm(clipped)) <= max_norm * (1 + 1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 256), st.integers(0, 2 ** 31 - 1))
+def test_int8_compression_error_feedback(n, seed):
+    """Error feedback: sum of transmitted values converges to the sum of
+    true values (residual stays bounded by one quantization step)."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(0, 1, (n,)).astype(np.float32))
+    err = jnp.zeros_like(g)
+    sent = jnp.zeros_like(g)
+    for _ in range(5):
+        q, scale, err = compress_int8(g, err)
+        sent = sent + decompress_int8(q, scale)
+    # after T rounds of the SAME gradient: sent ~= T*g with bounded err
+    resid = np.asarray(sent - 5 * g)
+    step = float(jnp.max(jnp.abs(g + err))) / 127.0 + 1e-6
+    assert np.max(np.abs(resid)) <= 2 * step + 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 50), st.integers(2, 16),
+       st.integers(0, 2 ** 31 - 1))
+def test_embedding_bag_property(rows, f, seed):
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.normal(0, 1, (rows, 4)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, rows, (3, f)).astype(np.int32))
+    out = ops.embedding_bag(table, ids)
+    exp = ref.embedding_bag_ref(table, ids)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_gbdt_predictions_bounded_by_leaves(seed):
+    """Margins are sums of leaf values: finite, and constant inputs give
+    constant predictions."""
+    from repro.trees.gbdt import GBDT
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (300, 4)).astype(np.float32)
+    y = rng.normal(0, 1, 300)
+    m = GBDT("l2", n_trees=5, max_depth=3)
+    f = m.fit(x, y)
+    pred = m.predict(f, x)
+    assert np.isfinite(pred).all()
+    const = np.full((7, 4), 0.5, np.float32)
+    cp = m.predict(f, const)
+    assert np.allclose(cp, cp[0])
