@@ -1,0 +1,14 @@
+PY := python
+export PYTHONPATH := src
+
+.PHONY: test test-fast bench
+
+test:
+	$(PY) -m pytest -q
+
+# skip the long distributed/serving tests (marked @pytest.mark.slow)
+test-fast:
+	$(PY) -m pytest -q -m "not slow"
+
+bench:
+	$(PY) -m benchmarks.run

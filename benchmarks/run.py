@@ -9,8 +9,12 @@ roofline table is produced separately from the dry-run artifacts via
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 
 
 def main() -> None:
@@ -19,7 +23,12 @@ def main() -> None:
     print("=" * 72)
     print("## Kernel micro-benchmarks (name,us_per_call,max_err)")
     from benchmarks import kernel_bench
-    kernel_bench.main()
+    krows = kernel_bench.main()
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    kpath = os.path.join(ARTIFACTS, "BENCH_kernels.json")
+    with open(kpath, "w") as f:
+        json.dump(krows, f, indent=2)
+    print(f"wrote {os.path.relpath(kpath)}")
 
     print("=" * 72)
     print("## Paper §Classification: C(q) power law")

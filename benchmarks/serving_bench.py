@@ -15,15 +15,19 @@ from repro.core.serving import WaveScheduler
 def main(encoder: str = "star-like", n_queries: int = 512) -> Dict:
     b = load_bench(encoder)
     qs = b.corpus.queries[:n_queries]
-    ws = WaveScheduler(b.index, wave_size=64, chunk=4, k=K,
-                       n_probe=b.n_probe, delta=4, phi=95.0)
     out = {}
-    for compact in (False, True):
+    # rows: compaction off/on with the unfused gather+einsum advance,
+    # then compaction on with the fused scan+merge kernel dispatch
+    cases = [("baseline", False, False), ("compact", True, False),
+             ("fused", True, True)]
+    for tag, compact, fused in cases:
+        ws = WaveScheduler(b.index, wave_size=64, chunk=4, k=K,
+                           n_probe=b.n_probe, delta=4, phi=95.0,
+                           use_fused=fused)
         t0 = time.time()
         rep = ws.serve(qs, compact=compact)
         wall = time.time() - t0
         probes = np.array([rep.probes[i] for i in range(n_queries)])
-        tag = "compact" if compact else "baseline"
         out[tag] = {"occupancy": rep.occupancy, "waves": rep.waves,
                     "lane_steps": rep.lane_steps,
                     "lane_steps_per_query": rep.lane_steps / n_queries,
@@ -34,6 +38,8 @@ def main(encoder: str = "star-like", n_queries: int = 512) -> Dict:
               f"C={probes.mean():5.1f} wall={wall:.1f}s")
     sp = out["baseline"]["lane_steps"] / out["compact"]["lane_steps"]
     print(f"compaction device-time speedup: {sp:.2f}x")
+    same = out["fused"]["mean_probes"] == out["compact"]["mean_probes"]
+    print(f"fused advance mean probes match: {same}")
     out["speedup"] = sp
     return out
 

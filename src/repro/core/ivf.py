@@ -164,9 +164,11 @@ def _merge_topk(scores: jnp.ndarray, ids: jnp.ndarray, new_scores: jnp.ndarray,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("use_scan_kernel", "use_topk_kernel"))
+    jax.jit, static_argnames=("use_scan_kernel", "use_topk_kernel",
+                              "use_fused_kernel", "chunk"))
 def search(index: IVFIndex, queries: jnp.ndarray, policy: Policy, *,
-           use_scan_kernel: bool = False, use_topk_kernel: bool = False
+           use_scan_kernel: bool = False, use_topk_kernel: bool = False,
+           use_fused_kernel: bool = False, chunk: int = 1
            ) -> SearchResult:
     """Batched adaptive A-kNN: probe clusters in similarity order with
     per-query early exit.
@@ -174,11 +176,26 @@ def search(index: IVFIndex, queries: jnp.ndarray, policy: Policy, *,
     ``policy`` is a static (hashable) Policy; tree ensembles used by
     REG/Classifier live in ``policy.reg``/``policy.clf`` as numpy-backed
     constants baked into the jaxpr.
+
+    ``chunk`` probes are advanced per ``while_loop`` iteration (the
+    per-probe slots are unrolled in the body), cutting dispatch
+    overhead ``chunk``-fold.  The exit policy is still evaluated at
+    per-probe granularity from per-probe top-k snapshots, so results
+    and probe counts are bit-identical to ``chunk=1`` for every policy.
+
+    ``use_fused_kernel`` routes the whole chunk through the fused
+    scan+merge Pallas kernel (``kernels/ivf_scan_merge.py``): one
+    dispatch per chunk, raw scores never leave VMEM, and the patience
+    signal phi is recovered from the kernel's per-probe new-entry
+    counts instead of re-running ``intersection_pct``.
     """
     B, d = queries.shape
     k, N, tau = policy.k, policy.n_probe, policy.tau
     nc = index.n_clusters
     n_rank = min(N, nc)
+    chunk = max(1, min(chunk, n_rank))
+    # phi1 (vs RS_1) only feeds the learned-policy feature matrix
+    needs_phi1 = policy.use_classifier or policy.use_reg
 
     csims = queries @ index.centroids.T                       # (B, C)
     rank_sims, cluster_rank = jax.lax.top_k(csims, n_rank)    # (B, N)
@@ -218,20 +235,18 @@ def search(index: IVFIndex, queries: jnp.ndarray, policy: Policy, *,
     def cond(s: SearchState):
         return (s.h < n_rank) & jnp.any(s.active)
 
-    def body(s: SearchState) -> SearchState:
+    def slot_update(s: SearchState, m_s, m_i, phi_pre) -> SearchState:
+        """One probe's state transition given its merged top-k
+        (snapshot or freshly merged) and, on the fused path, the
+        kernel-derived phi (None -> recompute via intersection_pct)."""
         h = s.h
-        # every active query streams the tile of its h-th ranked cluster
-        probe_idx = jnp.broadcast_to(jnp.minimum(h, n_rank - 1), (B,))
-        new_scores, new_ids = probe_scores(probe_idx)
-        m_s, m_i = _merge_topk(s.topk_scores, s.topk_ids, new_scores,
-                               new_ids, k, use_topk_kernel)
         act = s.active[:, None]
         topk_scores = jnp.where(act, m_s, s.topk_scores)
         topk_ids = jnp.where(act, m_i, s.topk_ids)
 
-        phi = intersection_pct(s.topk_ids, topk_ids)          # vs previous
+        phi = intersection_pct(s.topk_ids, topk_ids) \
+            if phi_pre is None else phi_pre               # vs previous
         rs1_ids = jnp.where((h == 0)[None, None] & act, topk_ids, s.rs1_ids)
-        phi1 = intersection_pct(rs1_ids, topk_ids)
 
         # record stability history rows h-1 in [0, tau-2]
         hist_col = jnp.clip(h - 1, 0, max(tau - 2, 0))
@@ -239,7 +254,11 @@ def search(index: IVFIndex, queries: jnp.ndarray, policy: Policy, *,
         in_window = (h >= 1) & (h <= tau - 1)
         upd = col_mask & in_window & s.active[:, None]
         phi_hist = jnp.where(upd, phi[:, None], s.phi_hist)
-        phi1_hist = jnp.where(upd, phi1[:, None], s.phi1_hist)
+        if needs_phi1:
+            phi1 = intersection_pct(rs1_ids, topk_ids)
+            phi1_hist = jnp.where(upd, phi1[:, None], s.phi1_hist)
+        else:
+            phi1_hist = s.phi1_hist
 
         extras = FeatureExtras(
             queries=queries, centroid_sims=s.centroid_sims,
@@ -255,6 +274,36 @@ def search(index: IVFIndex, queries: jnp.ndarray, policy: Policy, *,
         return SearchState(h + 1, topk_scores, topk_ids, rs1_ids, phi_hist,
                            phi1_hist, s.centroid_sims, dec.patience_ctr,
                            dec.target, active, probes)
+
+    def body(s: SearchState) -> SearchState:
+        if use_fused_kernel:
+            from repro.kernels import ops as kops
+            # one fused dispatch scores+merges the whole probe chunk;
+            # slots past n_rank get size 0 so they merge nothing
+            rel = jnp.arange(chunk, dtype=jnp.int32)
+            idx = jnp.clip(s.h + rel, 0, n_rank - 1)
+            cids = jnp.take(cluster_rank, idx, axis=1)        # (B, chunk)
+            offs = jnp.take(index.cluster_offsets, cids)
+            sizes = jnp.where((s.h + rel < n_rank)[None, :],
+                              jnp.take(index.cluster_sizes, cids), 0)
+            snap_s, snap_i, cnts = kops.ivf_scan_merge(
+                queries, index.docs, index.doc_ids, offs, sizes,
+                s.topk_scores, s.topk_ids, k=k,
+                list_pad=index.list_pad, chunk=chunk)
+        st = s
+        for t in range(chunk):
+            if use_fused_kernel:
+                phi_pre = 100.0 * (k - cnts[:, t]).astype(jnp.float32) / k
+                st = slot_update(st, snap_s[:, t], snap_i[:, t], phi_pre)
+            else:
+                probe_idx = jnp.broadcast_to(
+                    jnp.minimum(st.h, n_rank - 1), (B,))
+                new_scores, new_ids = probe_scores(probe_idx)
+                m_s, m_i = _merge_topk(st.topk_scores, st.topk_ids,
+                                       new_scores, new_ids, k,
+                                       use_topk_kernel)
+                st = slot_update(st, m_s, m_i, None)
+        return st
 
     final = jax.lax.while_loop(cond, body, init)
     return SearchResult(final.topk_scores, final.topk_ids, final.probes,

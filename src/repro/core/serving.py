@@ -75,10 +75,52 @@ def _admit(state: LaneState, centroids: jnp.ndarray, new_q: jnp.ndarray,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("chunk", "k", "n_probe", "delta"))
+                   static_argnames=("chunk", "k", "n_probe", "delta",
+                                    "use_fused"))
 def _advance(index: IVFIndex, state: LaneState, *, chunk: int, k: int,
-             n_probe: int, delta: int, phi: float) -> LaneState:
-    """Advance every active lane by up to ``chunk`` probes."""
+             n_probe: int, delta: int, phi: float,
+             use_fused: bool = True) -> LaneState:
+    """Advance every active lane by up to ``chunk`` probes.
+
+    The fused path issues ONE ``ivf_scan_merge`` dispatch for the whole
+    chunk — lanes stop materializing ``(W, list_pad, d)`` doc gathers,
+    raw scores stay in VMEM, and the per-probe patience signal comes
+    from the kernel's new-entry counts.  Exit granularity is unchanged:
+    lane state is rolled forward slot by slot from the kernel's
+    per-probe top-k snapshots, so mid-chunk exits land on the exact
+    probe they would have on the unfused path.
+    """
+
+    def slot(st: LaneState, ms, mi, phi_v) -> LaneState:
+        act = st.active[:, None]
+        ts = jnp.where(act, ms, st.topk_scores)
+        ti = jnp.where(act, mi, st.topk_ids)
+        ctr = jnp.where(st.active & (st.h >= 1) & (phi_v >= phi),
+                        st.patience + 1, 0)
+        h = jnp.where(st.active, st.h + 1, st.h)
+        exited = st.active & ((ctr >= delta) | (h >= n_probe))
+        return LaneState(st.qvec, st.cluster_rank, h, ts, ti, ctr,
+                         st.active & ~exited, st.qid)
+
+    if use_fused:
+        from repro.kernels import ops as kops
+        rel = jnp.arange(chunk, dtype=jnp.int32)[None, :]
+        idx = jnp.clip(state.h[:, None] + rel, 0, n_probe - 1)
+        cids = jnp.take_along_axis(state.cluster_rank, idx, axis=1)
+        offs = jnp.take(index.cluster_offsets, cids)
+        # inactive lanes and slots past the probe budget merge nothing
+        slot_ok = ((state.h[:, None] + rel) < n_probe) \
+            & state.active[:, None]
+        sizes = jnp.where(slot_ok, jnp.take(index.cluster_sizes, cids), 0)
+        snap_s, snap_i, cnts = kops.ivf_scan_merge(
+            state.qvec, index.docs, index.doc_ids, offs, sizes,
+            state.topk_scores, state.topk_ids, k=k,
+            list_pad=index.list_pad, chunk=chunk)
+        st = state
+        for t in range(chunk):
+            phi_v = 100.0 * (k - cnts[:, t]).astype(jnp.float32) / k
+            st = slot(st, snap_s[:, t], snap_i[:, t], phi_v)
+        return st
 
     def body(_, st: LaneState) -> LaneState:
         hv = jnp.minimum(st.h, n_probe - 1)
@@ -87,16 +129,8 @@ def _advance(index: IVFIndex, state: LaneState, *, chunk: int, k: int,
         sc = jnp.einsum("bld,bd->bl", tiles, st.qvec)
         sc = jnp.where(mask, sc, -jnp.inf)
         ms, mi = _merge_topk(st.topk_scores, st.topk_ids, sc, ids, k)
-        act = st.active[:, None]
-        ts = jnp.where(act, ms, st.topk_scores)
-        ti = jnp.where(act, mi, st.topk_ids)
-        phi_v = intersection_pct(st.topk_ids, ti)
-        ctr = jnp.where(st.active & (st.h >= 1) & (phi_v >= phi),
-                        st.patience + 1, 0)
-        h = jnp.where(st.active, st.h + 1, st.h)
-        exited = st.active & ((ctr >= delta) | (h >= n_probe))
-        return LaneState(st.qvec, st.cluster_rank, h, ts, ti, ctr,
-                         st.active & ~exited, st.qid)
+        ti = jnp.where(st.active[:, None], mi, st.topk_ids)
+        return slot(st, ms, mi, intersection_pct(st.topk_ids, ti))
 
     return jax.lax.fori_loop(0, chunk, body, state)
 
@@ -115,7 +149,8 @@ class WaveScheduler:
 
     def __init__(self, index: IVFIndex, *, wave_size: int = 64,
                  chunk: int = 8, k: int = 100, n_probe: int = 80,
-                 delta: int = 7, phi: float = 95.0):
+                 delta: int = 7, phi: float = 95.0,
+                 use_fused: bool = True):
         self.index = index
         self.w = wave_size
         self.chunk = chunk
@@ -123,6 +158,7 @@ class WaveScheduler:
         self.n = min(n_probe, index.n_clusters)
         self.delta = delta
         self.phi = phi
+        self.use_fused = use_fused
 
     def serve(self, queries: np.ndarray, *, compact: bool = True
               ) -> ServeReport:
@@ -165,7 +201,7 @@ class WaveScheduler:
             prev_state = state
             state = _advance(self.index, state, chunk=self.chunk,
                              k=self.k, n_probe=self.n, delta=self.delta,
-                             phi=self.phi)
+                             phi=self.phi, use_fused=self.use_fused)
             waves += 1
         return ServeReport(results, probes, waves,
                            float(np.mean(occ)) if occ else 0.0,

@@ -1,0 +1,203 @@
+"""Fused multi-probe IVF scan -> top-k merge kernel (DESIGN §2).
+
+Memory / dispatch model
+-----------------------
+The unfused hot loop costs two ``pallas_call`` dispatches per probe and
+round-trips the raw ``(B, list_pad)`` score tile through HBM between the
+scan (``ivf_scan.py``) and the merge (``topk_merge.py``).  This kernel
+fuses the paper's whole inner loop — probe -> score -> merge — over a
+*chunk* of probes in a single launch:
+
+* grid ``(B, chunk, list_pad // blk_l)``; the last dimension is
+  innermost, so for each query ``i`` the kernel walks its ``chunk``
+  probed clusters tile by tile.
+* per-(query, probe) cluster tiles stream HBM -> VMEM via
+  scalar-prefetched block offsets (``PrefetchScalarGridSpec``), so the
+  DMA engine fetches probe ``j+1``'s tile while the MXU scores probe
+  ``j``.  Offsets must be ``blk_l``-aligned (``build_index(align=...)``
+  guarantees it).
+* raw scores NEVER touch HBM: each ``(blk_l,)`` score strip lands in a
+  VMEM scratch accumulator; once a probe's ``list_pad`` strip is
+  complete it is masked by the true list size and bitonic-merged into a
+  running top-k held in VMEM scratch for the whole chunk.
+* every running-top-k lane carries the probe index it entered on
+  (``tag``; -1 for candidates inherited from the incoming running
+  top-k), so the per-probe *new-entry count* — and therefore the
+  patience stability signal ``phi = 100 * (k - new_entries) / k`` —
+  falls out of the merge for free, with no ``intersection_pct``
+  re-computation on (B, k) id sets.
+
+Outputs per launch: per-probe top-k snapshots ``(B, chunk, k)`` scores
+and doc ids (so the caller can evaluate the exit policy at per-probe
+granularity and roll a query back to its exact exit probe) plus the
+``(B, chunk)`` int32 new-entry counts.  HBM write traffic per probe is
+``k`` lanes instead of ``list_pad`` — and the merge reads come from
+VMEM instead of HBM.
+
+Scores use the ``-1e30`` sentinel in place of ``-inf`` inside the sort
+network; ``ops.ivf_scan_merge`` maps sentinels back to ``-inf`` on the
+way out so callers see the same empty-slot convention as the XLA path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30          # finite stand-in for -inf inside the sort network
+VALID_MIN = -1e29    # scores above this are real candidates
+
+
+def _bitonic_desc_tagged(s: jnp.ndarray, i: jnp.ndarray, t: jnp.ndarray
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Sort rows of s (R, M) descending, carrying ids i and tags t.
+
+    M must be a power of two.  The XOR-partner permutation of each
+    compare-exchange pass is expressed as a reshape + reverse on a
+    length-2 axis (lane ^ jj flips one address bit), which lowers to
+    cheap lane shuffles and — unlike gather-based formulations — keeps
+    XLA/Mosaic compile time flat in the network depth.
+    """
+    r, m = s.shape
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, m), 1)
+    stages = int(np.log2(m))
+
+    def partner(x, jj):
+        x3 = x.reshape(r, m // (2 * jj), 2, jj)
+        return jnp.flip(x3, axis=2).reshape(r, m)
+
+    for stage in range(1, stages + 1):
+        kk = 1 << stage
+        for jj in (1 << p for p in range(stage - 1, -1, -1)):
+            # per-lane mask: keep the max in descending blocks' low
+            # lanes and ascending blocks' high lanes
+            keep_max = jnp.where((idx & kk) == 0,
+                                 (idx & jj) == 0,
+                                 (idx & jj) != 0)
+            ps, pi, pt = partner(s, jj), partner(i, jj), partner(t, jj)
+            take_p = jnp.where(keep_max, ps > s, ps < s)
+            s = jnp.where(take_p, ps, s)
+            i = jnp.where(take_p, pi, i)
+            t = jnp.where(take_p, pt, t)
+    return s, i, t
+
+
+def _kernel(boffs_ref, sizes_ref, q_ref, docs_ref, ids_ref, ins_ref,
+            ini_ref, outs_ref, outi_ref, cnt_ref, sbuf, ibuf, ts, ti, tt,
+            *, k: int, chunk: int, blk_l: int, nblk: int, list_pad: int,
+            m_pad: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    tile_idx = pl.program_id(2)
+
+    # chunk start: load this query's incoming running top-k into scratch
+    @pl.when((j == 0) & (tile_idx == 0))
+    def _load_running():
+        s0 = jnp.pad(ins_ref[...], ((0, 0), (0, m_pad - k)),
+                     constant_values=NEG)
+        ts[...] = jnp.maximum(s0, NEG)          # clamp -inf empty slots
+        ti[...] = jnp.pad(ini_ref[...], ((0, 0), (0, m_pad - k)),
+                          constant_values=-1)
+        tt[...] = jnp.full((1, m_pad), -1, jnp.int32)
+
+    # score one (blk_l, d) strip of the probed cluster on the MXU
+    q = q_ref[...].astype(jnp.float32)          # (1, d)
+    tile = docs_ref[...].astype(jnp.float32)    # (blk_l, d)
+    sbuf[pl.ds(tile_idx, 1)] = jax.lax.dot_general(
+        q, tile, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (1, blk_l)
+    ibuf[pl.ds(tile_idx, 1)] = ids_ref[...]
+
+    # full probe tile scored: mask by list size and merge into top-k
+    @pl.when(tile_idx == nblk - 1)
+    def _merge():
+        size = sizes_ref[i * chunk + j]
+        new_s = sbuf[...].reshape(1, list_pad)
+        new_i = ibuf[...].reshape(1, list_pad)
+        lane = jax.lax.broadcasted_iota(jnp.int32, (1, list_pad), 1)
+        in_list = lane < size
+        new_s = jnp.where(in_list, new_s, NEG)
+        new_i = jnp.where(in_list, new_i, -1)
+        new_t = jnp.where(in_list, j, -1)
+        cand_s = jnp.concatenate([ts[:, :k], new_s], axis=1)
+        cand_i = jnp.concatenate([ti[:, :k], new_i], axis=1)
+        cand_t = jnp.concatenate([tt[:, :k], new_t], axis=1)
+        pad = m_pad - (k + list_pad)
+        if pad:
+            cand_s = jnp.pad(cand_s, ((0, 0), (0, pad)),
+                             constant_values=NEG)
+            cand_i = jnp.pad(cand_i, ((0, 0), (0, pad)),
+                             constant_values=-1)
+            cand_t = jnp.pad(cand_t, ((0, 0), (0, pad)),
+                             constant_values=-1)
+        ss, si, st = _bitonic_desc_tagged(cand_s, cand_i, cand_t)
+        ts[...] = ss
+        ti[...] = si
+        tt[...] = st
+        # lanes that survived from before this probe == |prev ∩ new|;
+        # phi = 100 * kept / k = 100 * (k - new_entries) / k
+        kept = jnp.sum(((ss[:, :k] > VALID_MIN) & (st[:, :k] < j))
+                       .astype(jnp.int32))
+        cnt_ref[...] = jnp.full((1, 1), k, jnp.int32) - kept
+        outs_ref[...] = ss[:, :k].reshape(1, 1, k)
+        outi_ref[...] = si[:, :k].reshape(1, 1, k)
+
+
+def ivf_scan_merge(queries: jnp.ndarray, docs: jnp.ndarray,
+                   ids2d: jnp.ndarray, block_offsets: jnp.ndarray,
+                   sizes: jnp.ndarray, run_scores: jnp.ndarray,
+                   run_ids: jnp.ndarray, *, k: int, list_pad: int,
+                   chunk: int, blk_l: int = 64, interpret: bool = False
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """queries (B,d); docs (n,d) cluster-major; ids2d (n//blk_l, blk_l)
+    doc ids reshaped row-blocked; block_offsets/sizes (B*chunk,) int32
+    (offsets in blk_l units); run_scores/run_ids (B,k) incoming top-k.
+
+    Returns per-probe snapshots (B, chunk, k) scores (NEG sentinel for
+    empty slots) / ids, and (B, chunk) int32 new-entry counts.
+    """
+    b, d = queries.shape
+    assert list_pad % blk_l == 0, "list_pad must be a blk_l multiple"
+    nblk = list_pad // blk_l
+    m_pad = 1 << int(np.ceil(np.log2(k + list_pad)))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, chunk, nblk),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j, l, bo, sz: (i, 0)),
+            pl.BlockSpec((blk_l, d),
+                         lambda i, j, l, bo, sz: (bo[i * chunk + j] + l, 0)),
+            pl.BlockSpec((1, blk_l),
+                         lambda i, j, l, bo, sz: (bo[i * chunk + j] + l, 0)),
+            pl.BlockSpec((1, k), lambda i, j, l, bo, sz: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, j, l, bo, sz: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, k), lambda i, j, l, bo, sz: (i, j, 0)),
+            pl.BlockSpec((1, 1, k), lambda i, j, l, bo, sz: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, l, bo, sz: (i, j)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((nblk, blk_l), jnp.float32),   # probe score strip
+            pltpu.VMEM((nblk, blk_l), jnp.int32),     # probe id strip
+            pltpu.VMEM((1, m_pad), jnp.float32),      # running top-k scores
+            pltpu.VMEM((1, m_pad), jnp.int32),        # running top-k ids
+            pltpu.VMEM((1, m_pad), jnp.int32),        # entry-probe tags
+        ],
+    )
+    kern = functools.partial(_kernel, k=k, chunk=chunk, blk_l=blk_l,
+                             nblk=nblk, list_pad=list_pad, m_pad=m_pad)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, chunk, k), jnp.float32),
+                   jax.ShapeDtypeStruct((b, chunk, k), jnp.int32),
+                   jax.ShapeDtypeStruct((b, chunk), jnp.int32)],
+        interpret=interpret,
+    )(block_offsets.astype(jnp.int32), sizes.astype(jnp.int32),
+      queries, docs, ids2d, run_scores, run_ids)

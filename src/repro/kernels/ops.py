@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import embedding_bag as _eb
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ivf_scan as _scan
+from repro.kernels import ivf_scan_merge as _sm
 from repro.kernels import topk_merge as _tm
 
 
@@ -38,6 +39,35 @@ def ivf_scan(queries, docs, offsets, sizes, *, list_pad: int,
                          blk_l=blk_l, interpret=_interpret())
     mask = jnp.arange(list_pad)[None, :] < sizes[:, None]
     return jnp.where(mask, raw, -jnp.inf)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "list_pad", "chunk", "blk_l"))
+def ivf_scan_merge(queries, docs, doc_ids, offsets, sizes, run_scores,
+                   run_ids, *, k: int, list_pad: int, chunk: int,
+                   blk_l: int = 64
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused multi-probe scan -> running top-k merge (one dispatch per
+    ``chunk`` probes; see ivf_scan_merge.py for the memory model).
+
+    offsets/sizes: (B, chunk) row offsets (blk_l aligned) and true list
+    sizes per probed cluster; run_scores/run_ids: (B, k) incoming
+    running top-k.  Returns ((B, chunk, k) snapshot scores with -inf
+    empty slots, (B, chunk, k) snapshot ids, (B, chunk) new-entry
+    counts with phi = 100 * (k - count) / k).
+    """
+    n = doc_ids.shape[0]
+    tail = (-n) % blk_l
+    ids2d = jnp.pad(doc_ids, (0, tail),
+                    constant_values=-1).reshape(-1, blk_l)
+    out_s, out_i, cnt = _sm.ivf_scan_merge(
+        queries, docs, ids2d,
+        (offsets // blk_l).reshape(-1), sizes.reshape(-1),
+        run_scores, run_ids, k=k, list_pad=list_pad, chunk=chunk,
+        blk_l=blk_l, interpret=_interpret())
+    # sentinel -> -inf so empty slots match the XLA merge convention
+    out_s = jnp.where(out_s > _sm.VALID_MIN, out_s, -jnp.inf)
+    return out_s, out_i, cnt
 
 
 @functools.partial(jax.jit, static_argnames=("k", "blk_b"))

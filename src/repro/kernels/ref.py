@@ -45,6 +45,45 @@ def topk_merge_ref(scores: jnp.ndarray, ids: jnp.ndarray,
     return ts, jnp.take_along_axis(cat_i, idx, 1)
 
 
+def ivf_scan_merge_ref(queries: jnp.ndarray, docs: jnp.ndarray,
+                       doc_ids: jnp.ndarray, offsets: jnp.ndarray,
+                       sizes: jnp.ndarray, run_scores: jnp.ndarray,
+                       run_ids: jnp.ndarray, k: int, list_pad: int
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused multi-probe scan+merge oracle.
+
+    offsets/sizes: (B, chunk) row offsets / true list sizes of each
+    query's probed clusters.  run_scores/run_ids: (B, k) incoming
+    running top-k (-inf / -1 empty slots).  Returns per-probe top-k
+    snapshots (B, chunk, k) scores / ids and (B, chunk) int32
+    new-entry counts, where count = k - |prev_topk ∩ new_topk|
+    (invalid slots count as new), so
+    phi = 100 * (k - count) / k == intersection_pct(prev, new).
+    """
+    chunk = offsets.shape[1]
+    s, i = run_scores.astype(jnp.float32), run_ids
+    snap_s, snap_i, cnts = [], [], []
+    for t in range(chunk):
+        tiles = jax.vmap(lambda o: jax.lax.dynamic_slice_in_dim(
+            docs, o, list_pad, 0))(offsets[:, t])
+        tids = jax.vmap(lambda o: jax.lax.dynamic_slice_in_dim(
+            doc_ids, o, list_pad, 0))(offsets[:, t])
+        sc = jnp.einsum("bld,bd->bl", tiles.astype(jnp.float32),
+                        queries.astype(jnp.float32))
+        mask = jnp.arange(list_pad)[None] < sizes[:, t][:, None]
+        sc = jnp.where(mask, sc, -jnp.inf)
+        tids = jnp.where(mask, tids, -1)
+        ns, ni = topk_merge_ref(s, i, sc, tids, k)
+        inter = jnp.sum((i[:, :, None] == ni[:, None, :])
+                        & (i[:, :, None] >= 0), axis=(1, 2))
+        cnts.append(k - inter.astype(jnp.int32))
+        snap_s.append(ns)
+        snap_i.append(ni)
+        s, i = ns, ni
+    return (jnp.stack(snap_s, axis=1), jnp.stack(snap_i, axis=1),
+            jnp.stack(cnts, axis=1))
+
+
 def embedding_bag_ref(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
     """table (R,D), ids (B,F) -> (B,D) sum-bag."""
     return jnp.take(table, ids, axis=0).sum(axis=1)

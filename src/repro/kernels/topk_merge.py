@@ -21,16 +21,26 @@ NEG_INF = -jnp.inf
 
 def _bitonic_desc(s: jnp.ndarray, i: jnp.ndarray
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Sort rows of s (B, M) descending, carrying i. M = power of 2."""
-    m = s.shape[1]
+    """Sort rows of s (B, M) descending, carrying i. M = power of 2.
+
+    The lane ^ jj partner permutation of each compare-exchange pass is
+    a reshape + reverse on a length-2 axis (flip one address bit); this
+    lowers to lane shuffles and keeps compile time flat in network
+    depth, unlike gather-based (jnp.take) formulations.
+    """
+    b, m = s.shape
     idx = jnp.arange(m)
     stages = int(np.log2(m))
+
+    def partner(x, jj):
+        return jnp.flip(x.reshape(b, m // (2 * jj), 2, jj),
+                        axis=2).reshape(b, m)
+
     for st in range(1, stages + 1):
         kk = 1 << st
         for jj in (1 << p for p in range(st - 1, -1, -1)):
-            partner = idx ^ jj
-            ps = jnp.take(s, partner, axis=1)
-            pi = jnp.take(i, partner, axis=1)
+            ps = partner(s, jj)
+            pi = partner(i, jj)
             up = (idx & kk) == 0            # descending blocks
             is_lo = (idx & jj) == 0
             # lane keeps max if (descending and lower) or (asc and upper)
@@ -77,4 +87,7 @@ def topk_merge(scores: jnp.ndarray, ids: jnp.ndarray,
                    jax.ShapeDtypeStruct((b, k), ids.dtype)],
         interpret=interpret,
     )(scores, ids, new_scores, new_ids)
+    # the kernel clamps -inf to -1e30 for the sort network; map the
+    # sentinel back so empty slots match the XLA merge (-inf) exactly
+    out_s = jnp.where(out_s > -1e29, out_s, NEG_INF)
     return out_s, out_i

@@ -8,6 +8,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow   # subprocess-per-test: ~1 min total
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

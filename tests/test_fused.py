@@ -1,0 +1,104 @@
+"""Fused scan->merge kernel + chunked search parity (DESIGN §2).
+
+The chunked while-loop and the fused Pallas path must be *bit-identical*
+to the per-probe baseline: same top-k ids, same per-query probe counts,
+same phi history — for heuristic and learned policies alike.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import policies, search
+from repro.core.training import train_policy_models
+from repro.kernels import ops, ref
+
+
+@pytest.fixture(scope="module")
+def cascade_policy(tiny_index, tiny_corpus):
+    qs = tiny_corpus.queries
+    models = train_policy_models(
+        tiny_index, tiny_corpus.docs, qs[:128], qs[128:192],
+        n_probe=24, k=10, tau=3, n_trees=10, max_depth=3)
+    return policies.cascade_patience(
+        24, models.clf_weighted, delta=3, phi=90.0, k=10, tau=3)
+
+
+def _policy(name, cascade):
+    if name == "patience":
+        return policies.patience(24, delta=2, phi=90.0, k=10, tau=3)
+    if name == "fixed":
+        return policies.fixed(12, k=10, tau=3)
+    return cascade
+
+
+@pytest.mark.parametrize("chunk", [2, 4, 5])
+@pytest.mark.parametrize("policy_name", ["patience", "fixed", "cascade"])
+def test_chunked_search_matches_per_probe(tiny_index, tiny_corpus,
+                                          cascade_policy, chunk,
+                                          policy_name):
+    pol = _policy(policy_name, cascade_policy)
+    q = jnp.asarray(tiny_corpus.queries[:64])
+    base = search(tiny_index, q, pol)
+    chunked = search(tiny_index, q, pol, chunk=chunk)
+    assert np.array_equal(np.asarray(base.topk_ids),
+                          np.asarray(chunked.topk_ids))
+    assert np.array_equal(np.asarray(base.probes),
+                          np.asarray(chunked.probes))
+
+
+@pytest.mark.parametrize("policy_name", ["patience", "fixed", "cascade"])
+def test_fused_search_matches_baseline(tiny_index, tiny_corpus,
+                                       cascade_policy, policy_name):
+    pol = _policy(policy_name, cascade_policy)
+    q = jnp.asarray(tiny_corpus.queries[:64])
+    base = search(tiny_index, q, pol)
+    fused = search(tiny_index, q, pol, use_fused_kernel=True, chunk=4)
+    assert np.array_equal(np.asarray(base.topk_ids),
+                          np.asarray(fused.topk_ids))
+    assert np.array_equal(np.asarray(base.probes),
+                          np.asarray(fused.probes))
+    assert np.allclose(np.asarray(base.phi_hist),
+                       np.asarray(fused.phi_hist), atol=1e-4)
+
+
+def test_fused_kernel_matches_ref():
+    """Direct kernel-vs-oracle parity: scores, ids and the per-probe
+    new-entry counts (the phi signal) on disjoint aligned clusters."""
+    rng = np.random.default_rng(3)
+    B, chunk, lp, k, d = 4, 3, 256, 10, 16
+    n = 64 * lp
+    docs = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    ids = jnp.arange(n, dtype=jnp.int32)
+    qs = jnp.asarray(rng.normal(size=(B, d)).astype(np.float32))
+    # disjoint per-query lists so each doc id is scored at most once
+    offs = np.stack([rng.choice(n // lp, chunk, replace=False) * lp
+                     for _ in range(B)]).astype(np.int32)
+    sizes = rng.integers(1, lp + 1, size=(B, chunk)).astype(np.int32)
+    sizes[0, 1] = 0                        # empty probe slot
+    rs = jnp.full((B, k), -jnp.inf, jnp.float32)
+    ri = jnp.full((B, k), -1, jnp.int32)
+
+    o_s, o_i, o_c = ops.ivf_scan_merge(
+        qs, docs, ids, jnp.asarray(offs), jnp.asarray(sizes), rs, ri,
+        k=k, list_pad=lp, chunk=chunk)
+    r_s, r_i, r_c = ref.ivf_scan_merge_ref(
+        qs, docs, ids, jnp.asarray(offs), jnp.asarray(sizes), rs, ri,
+        k, lp)
+
+    # -inf empty slots must match exactly (sentinel mapped back)
+    np.testing.assert_array_equal(np.isneginf(np.asarray(o_s)),
+                                  np.isneginf(np.asarray(r_s)))
+    np.testing.assert_allclose(
+        np.nan_to_num(np.asarray(o_s), neginf=0.0),
+        np.nan_to_num(np.asarray(r_s), neginf=0.0), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(o_i), np.asarray(r_i))
+    np.testing.assert_array_equal(np.asarray(o_c), np.asarray(r_c))
+    # phi recovered from counts == intersection_pct of the snapshots
+    from repro.core.ivf import intersection_pct
+    prev = ri
+    for t in range(chunk):
+        phi_cnt = 100.0 * (k - np.asarray(o_c)[:, t]) / k
+        phi_ref = np.asarray(intersection_pct(prev, o_i[:, t]))
+        np.testing.assert_allclose(phi_cnt, phi_ref, atol=1e-4)
+        prev = o_i[:, t]

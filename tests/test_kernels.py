@@ -78,6 +78,22 @@ def test_topk_merge_with_neg_inf():
     assert oi_.tolist() == [[8, 7]]
 
 
+def test_topk_merge_empty_slots_stay_neg_inf():
+    """The in-kernel -1e30 sentinel must not leak: when fewer than k
+    candidates exist, empty output slots are exactly -inf, bit-matching
+    the XLA merge path."""
+    s = jnp.full((2, 4), -np.inf, jnp.float32)
+    i = jnp.full((2, 4), -1, jnp.int32)
+    ns = jnp.asarray([[3.0, -np.inf, -np.inf],
+                      [-np.inf, -np.inf, -np.inf]], jnp.float32)
+    ni = jnp.asarray([[5, -1, -1], [-1, -1, -1]], jnp.int32)
+    os_, oi_ = ops.topk_merge(s, i, ns, ni, 4)
+    es, ei = ref.topk_merge_ref(s, i, ns, ni, 4)
+    assert np.array_equal(np.asarray(os_), np.asarray(es))
+    assert np.isneginf(np.asarray(os_)[0, 1:]).all()
+    assert np.isneginf(np.asarray(os_)[1]).all()
+
+
 @pytest.mark.parametrize("r,d,b,f", [(50, 8, 4, 3), (200, 16, 8, 5),
                                      (1000, 32, 2, 10)])
 def test_embedding_bag_sweep(r, d, b, f):

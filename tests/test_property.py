@@ -1,6 +1,14 @@
-"""Property-based tests (hypothesis) over system invariants."""
+"""Property-based tests (hypothesis) over system invariants.
+
+``hypothesis`` is an optional test dependency (see the ``test`` extra
+in pyproject.toml); the module is skipped when it is absent so the
+rest of the suite still collects.
+"""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import jax
 import jax.numpy as jnp

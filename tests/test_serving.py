@@ -1,10 +1,13 @@
 """Wave-scheduled serving (beyond-paper throughput layer)."""
 import numpy as np
+import pytest
 
 import jax.numpy as jnp
 
 from repro.core import brute_force, metrics, policies, search
 from repro.core.serving import WaveScheduler
+
+pytestmark = pytest.mark.slow   # full serve loops: ~15s total
 
 
 def test_wave_scheduler_serves_everything(tiny_index, tiny_corpus):
