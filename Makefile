@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test test-fast bench
+.PHONY: test test-fast bench bench-smoke
 
 test:
 	$(PY) -m pytest -q
@@ -12,3 +12,12 @@ test-fast:
 
 bench:
 	$(PY) -m benchmarks.run
+
+# minutes-scale benchmark pass (CI): tiny substrate, then assert every
+# JSON artifact parses
+bench-smoke:
+	$(PY) -m benchmarks.run --smoke
+	$(PY) -c "import json; \
+	  [json.load(open('artifacts/BENCH_' + n + '.json')) \
+	   for n in ('kernels', 'table2', 'serving')]; \
+	  print('bench artifacts OK')"

@@ -39,6 +39,14 @@ TAU = 5
 RHO = 0.95
 
 
+# smoke mode: a few-seconds substrate for `make bench-smoke` / CI —
+# same pipeline shape, fraction of the data
+SMOKE_N_DOCS = 4000
+SMOKE_DIM = 24
+SMOKE_N_COMPONENTS = 64
+SMOKE_N_QUERIES = 384
+
+
 @dataclass
 class Bench:
     name: str
@@ -49,31 +57,40 @@ class Bench:
     splits: Dict[str, slice]
 
 
-def load_bench(name: str, *, force: bool = False) -> Bench:
+def _sizes(smoke: bool) -> Tuple[int, int, int, int]:
+    if smoke:
+        return SMOKE_N_DOCS, SMOKE_DIM, SMOKE_N_COMPONENTS, SMOKE_N_QUERIES
+    return N_DOCS, DIM, N_COMPONENTS, N_QUERIES
+
+
+def load_bench(name: str, *, force: bool = False,
+               smoke: bool = False) -> Bench:
+    n_docs, dim, comps, nq = _sizes(smoke)
     os.makedirs(CACHE, exist_ok=True)
-    path = os.path.join(CACHE, f"{name}.pkl")
+    fname = f"{name}_smoke.pkl" if smoke else f"{name}.pkl"
+    path = os.path.join(CACHE, fname)
     if os.path.exists(path) and not force:
         with open(path, "rb") as f:
             saved = pickle.load(f)
         corpus = Corpus(saved["docs"], saved["queries"], saved["relevant"])
-        index = build_index(corpus.docs, N_COMPONENTS, list_pad=256,
+        index = build_index(corpus.docs, comps, list_pad=256,
                             n_iters=6, seed=0)
         return Bench(name, corpus, index, saved["n_probe"],
-                     saved["exact_ids"], _splits())
+                     saved["exact_ids"], _splits(nq, smoke))
     spread, hard = ENCODERS[name]
     seed = abs(hash(name)) % 2 ** 31
-    corpus = clustered_corpus(n_docs=N_DOCS, dim=DIM,
-                              n_components=N_COMPONENTS,
-                              n_queries=N_QUERIES, spread=spread,
+    corpus = clustered_corpus(n_docs=n_docs, dim=dim,
+                              n_components=comps,
+                              n_queries=nq, spread=spread,
                               hard_frac=hard, seed=seed)
-    index = build_index(corpus.docs, N_COMPONENTS, list_pad=256,
+    index = build_index(corpus.docs, comps, list_pad=256,
                         n_iters=6, seed=0)
-    sp = _splits()
+    sp = _splits(nq, smoke)
     n_probe = choose_n_probe(index, corpus.docs,
                              corpus.queries[sp["valid"]], rho=RHO, k=K,
-                             n_max=N_COMPONENTS)
-    exact = np.empty((N_QUERIES, K), np.int32)
-    for s in range(0, N_QUERIES, 512):
+                             n_max=comps)
+    exact = np.empty((nq, K), np.int32)
+    for s in range(0, nq, 512):
         _, ids = brute_force(jnp.asarray(corpus.docs),
                              jnp.asarray(corpus.queries[s: s + 512]), K)
         exact[s: s + 512] = np.asarray(ids)
@@ -84,10 +101,9 @@ def load_bench(name: str, *, force: bool = False) -> Bench:
     return Bench(name, corpus, index, n_probe, exact, sp)
 
 
-def _splits() -> Dict[str, slice]:
-    n_test = 1024
-    n_valid = 512
-    return {"train": slice(0, N_QUERIES - n_test - n_valid),
-            "valid": slice(N_QUERIES - n_test - n_valid,
-                           N_QUERIES - n_test),
-            "test": slice(N_QUERIES - n_test, N_QUERIES)}
+def _splits(nq: int = N_QUERIES, smoke: bool = False) -> Dict[str, slice]:
+    n_test = 128 if smoke else 1024
+    n_valid = 64 if smoke else 512
+    return {"train": slice(0, nq - n_test - n_valid),
+            "valid": slice(nq - n_test - n_valid, nq - n_test),
+            "test": slice(nq - n_test, nq)}

@@ -34,8 +34,9 @@ def _err(a, b) -> float:
         jnp.asarray(a) - jnp.asarray(b), neginf=0.0, posinf=0.0))))
 
 
-def main() -> List[Dict]:
+def main(smoke: bool = False) -> List[Dict]:
     rows = []
+    reps = 2 if smoke else 5
 
     def add(name, us, err):
         rows.append({"name": name, "us": us, "err": err})
@@ -48,9 +49,9 @@ def main() -> List[Dict]:
     jref = jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c))
     fa_ops = ops.flash_attention(q, k, v, blk_q=128, blk_k=128)
     err = _err(fa_ops, jref(q, k, v))
-    add("flash_attention_ref_xla", _time(jref, q, k, v), err)
+    add("flash_attention_ref_xla", _time(jref, q, k, v, reps=reps), err)
     add("flash_attention_ops",
-        _time(lambda: ops.flash_attention(q, k, v, blk_q=128, blk_k=128)),
+        _time(lambda: ops.flash_attention(q, k, v, blk_q=128, blk_k=128), reps=reps),
         err)
 
     # ivf scan
@@ -61,9 +62,9 @@ def main() -> List[Dict]:
     jscan = jax.jit(lambda a, b, c, d: ref.ivf_scan_ref(a, b, c, d, 256))
     err = _err(ops.ivf_scan(qs, docs, offs, szs, list_pad=256),
                jscan(qs, docs, offs, szs))
-    add("ivf_scan_ref_xla", _time(jscan, qs, docs, offs, szs), err)
+    add("ivf_scan_ref_xla", _time(jscan, qs, docs, offs, szs, reps=reps), err)
     add("ivf_scan_ops",
-        _time(lambda: ops.ivf_scan(qs, docs, offs, szs, list_pad=256)), err)
+        _time(lambda: ops.ivf_scan(qs, docs, offs, szs, list_pad=256), reps=reps), err)
 
     # topk merge
     s = r.normal(r.PRNGKey(5), (256, 50))
@@ -73,38 +74,64 @@ def main() -> List[Dict]:
     jmerge = jax.jit(lambda a, b, c, d: ref.topk_merge_ref(a, b, c, d, 50))
     err = _err(ops.topk_merge(s, i, ns, ni, 50)[0],
                jmerge(s, i, ns, ni)[0])
-    add("topk_merge_ref_xla", _time(jmerge, s, i, ns, ni), err)
+    add("topk_merge_ref_xla", _time(jmerge, s, i, ns, ni, reps=reps), err)
     add("topk_merge_ops",
-        _time(lambda: ops.topk_merge(s, i, ns, ni, 50)), err)
+        _time(lambda: ops.topk_merge(s, i, ns, ni, 50), reps=reps), err)
 
-    # fused multi-probe scan -> merge (chunk of 4 probes, one dispatch)
-    B, chunk, lp, kk = 16, 4, 256, 50
-    fdocs = r.normal(r.PRNGKey(11), (B * chunk * lp, 64))
-    fids = jnp.arange(B * chunk * lp, dtype=jnp.int32)
-    foffs = (jnp.arange(B * chunk, dtype=jnp.int32) * lp).reshape(B, chunk)
-    fszs = jnp.full((B, chunk), lp - 6, jnp.int32)
+    # fused multi-probe scan -> merge: chunk sweep (total probes per
+    # query fixed at 8, so rows compare dispatch granularity — how many
+    # probes amortise one kernel launch — not total work)
+    B, n_pr, lp, kk = 16, 8, 256, 50
+    fdocs = r.normal(r.PRNGKey(11), (B * n_pr * lp, 64))
+    fids = jnp.arange(B * n_pr * lp, dtype=jnp.int32)
+    all_offs = (jnp.arange(B * n_pr, dtype=jnp.int32) * lp).reshape(B, n_pr)
     fq = r.normal(r.PRNGKey(12), (B, 64))
     rs = jnp.full((B, kk), -jnp.inf, jnp.float32)
     ri = jnp.full((B, kk), -1, jnp.int32)
+    chunk4 = all_offs[:, :4]
+    fszs4 = jnp.full((B, 4), lp - 6, jnp.int32)
     jfused = jax.jit(lambda: ref.ivf_scan_merge_ref(
-        fq, fdocs, fids, foffs, fszs, rs, ri, kk, lp))
-    o_ops = ops.ivf_scan_merge(fq, fdocs, fids, foffs, fszs, rs, ri,
-                               k=kk, list_pad=lp, chunk=chunk)
+        fq, fdocs, fids, chunk4, fszs4, rs, ri, kk, lp))
+    o_ops = ops.ivf_scan_merge(fq, fdocs, fids, chunk4, fszs4, rs, ri,
+                               k=kk, list_pad=lp, chunk=4)
     o_ref = jfused()
     err = max(_err(o_ops[0], o_ref[0]),
               float(jnp.max(jnp.abs(o_ops[2] - o_ref[2]))))
-    add("ivf_scan_merge_ref_xla", _time(jfused), err)
-    add("ivf_scan_merge_ops",
-        _time(lambda: ops.ivf_scan_merge(fq, fdocs, fids, foffs, fszs,
-                                         rs, ri, k=kk, list_pad=lp,
-                                         chunk=chunk)), err)
+    add("ivf_scan_merge_ref_xla", _time(jfused, reps=reps), err)
+
+    def sweep_chunk(chunk: int) -> float:
+        """us for the full n_pr probes issued as n_pr/chunk dispatches."""
+        offs = all_offs.reshape(B, n_pr // chunk, chunk)
+        szs = jnp.full((B, chunk), lp - 6, jnp.int32)
+
+        def run():
+            s, i = rs, ri
+            for j in range(n_pr // chunk):
+                snap_s, snap_i, _ = ops.ivf_scan_merge(
+                    fq, fdocs, fids, offs[:, j], szs, s, i,
+                    k=kk, list_pad=lp, chunk=chunk)
+                s, i = snap_s[:, -1], snap_i[:, -1]
+            return s, i
+
+        return _time(run, reps=reps)
+
+    for chunk in ([4] if smoke else [1, 2, 4, 8]):
+        add(f"ivf_scan_merge_ops_c{chunk}", sweep_chunk(chunk), err)
+
+    # delta scan (live-mutation buffer brute force)
+    dvecs = r.normal(r.PRNGKey(13), (1024, 64))
+    dref = jax.jit(ref.delta_scan_ref)
+    err = _err(ops.delta_scan(fq, dvecs), dref(fq, dvecs))
+    add("delta_scan_ref_xla", _time(dref, fq, dvecs, reps=reps), err)
+    add("delta_scan_ops",
+        _time(lambda: ops.delta_scan(fq, dvecs), reps=reps), err)
 
     # embedding bag
     table = r.normal(r.PRNGKey(9), (100_000, 16))
     ids = r.randint(r.PRNGKey(10), (1024, 26), 0, 100_000)
     jbag = jax.jit(ref.embedding_bag_ref)
     err = _err(ops.embedding_bag(table, ids), jbag(table, ids))
-    add("embedding_bag_ref_xla", _time(jbag, table, ids), err)
+    add("embedding_bag_ref_xla", _time(jbag, table, ids, reps=reps), err)
     # embedding_bag's interpret-mode gather costs ~30s/call on CPU;
     # the single err check above already exercises the ops path
 

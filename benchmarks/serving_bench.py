@@ -1,6 +1,12 @@
 """Beyond-paper: wave-scheduler throughput (lane occupancy + effective
 probes/query with and without compaction) — how per-query early exit
-becomes batch throughput on a lockstep device (DESIGN §2)."""
+becomes batch throughput on a lockstep device (DESIGN §2) — plus the
+live-mutation overlay cost: serving against a partially full delta
+buffer, and a mixed query/mutation stream with background merges
+(``repro.index``).  The live rows report recall against the static
+exact oracle; the stream row's ``recall_gap`` is the acceptance signal
+(must stay within 0.01 of the static run).
+"""
 from __future__ import annotations
 
 import time
@@ -9,33 +15,114 @@ from typing import Dict
 import numpy as np
 
 from benchmarks.common import K, load_bench
+from repro.core import metrics
 from repro.core.serving import WaveScheduler
+from repro.index import DeltaFull, IndexRegistry, LiveIndex, version_of
 
 
-def main(encoder: str = "star-like", n_queries: int = 512) -> Dict:
-    b = load_bench(encoder)
+def _run(ws, qs, *, compact=True, on_wave=None, exact=None) -> Dict:
+    n = qs.shape[0]
+    t0 = time.time()
+    rep = ws.serve(qs, compact=compact, on_wave=on_wave)
+    wall = time.time() - t0
+    probes = np.array([rep.probes[i] for i in range(n)])
+    row = {"occupancy": rep.occupancy, "waves": rep.waves,
+           "lane_steps": rep.lane_steps,
+           "lane_steps_per_query": rep.lane_steps / n,
+           "mean_probes": float(probes.mean()), "wall_s": wall}
+    if exact is not None:
+        ids = np.stack([rep.results[i] for i in range(n)])
+        row["recall"] = metrics.r_star_at_k(ids, exact[:n])
+    return row
+
+
+def _corpus_like(rng, docs, m):
+    src = rng.integers(0, len(docs), m)
+    return (docs[src] + rng.normal(scale=0.05, size=(m, docs.shape[1]))
+            ).astype(np.float32)
+
+
+def main(encoder: str = "star-like", n_queries: int = 512,
+         smoke: bool = False) -> Dict:
+    b = load_bench(encoder, smoke=smoke)
+    if smoke:
+        n_queries = min(n_queries, 128)
     qs = b.corpus.queries[:n_queries]
+    exact = b.exact_ids
     out = {}
+
+    def ws(registry=None, fused=True):
+        return WaveScheduler(b.index, wave_size=64, chunk=4, k=K,
+                             n_probe=b.n_probe, delta=4, phi=95.0,
+                             use_fused=fused, registry=registry)
+
     # rows: compaction off/on with the unfused gather+einsum advance,
     # then compaction on with the fused scan+merge kernel dispatch
     cases = [("baseline", False, False), ("compact", True, False),
              ("fused", True, True)]
     for tag, compact, fused in cases:
-        ws = WaveScheduler(b.index, wave_size=64, chunk=4, k=K,
-                           n_probe=b.n_probe, delta=4, phi=95.0,
-                           use_fused=fused)
-        t0 = time.time()
-        rep = ws.serve(qs, compact=compact)
-        wall = time.time() - t0
-        probes = np.array([rep.probes[i] for i in range(n_queries)])
-        out[tag] = {"occupancy": rep.occupancy, "waves": rep.waves,
-                    "lane_steps": rep.lane_steps,
-                    "lane_steps_per_query": rep.lane_steps / n_queries,
-                    "mean_probes": float(probes.mean()),
-                    "wall_s": wall}
-        print(f"{tag:9s} occ={rep.occupancy:.2f} waves={rep.waves:4d} "
-              f"lane_steps/q={rep.lane_steps / n_queries:6.1f} "
-              f"C={probes.mean():5.1f} wall={wall:.1f}s")
+        out[tag] = _run(ws(fused=fused), qs, compact=compact, exact=exact)
+        r = out[tag]
+        print(f"{tag:14s} occ={r['occupancy']:.2f} waves={r['waves']:4d} "
+              f"lane_steps/q={r['lane_steps_per_query']:6.1f} "
+              f"C={r['mean_probes']:5.1f} R*@k={r['recall']:.3f} "
+              f"wall={r['wall_s']:.1f}s")
+
+    # delta-buffer occupancy sweep: how much does brute-force scanning
+    # a fuller buffer cost, and does the overlay keep recall?
+    cap = 256 if smoke else 512
+    for frac in ([0.5] if smoke else [0.25, 0.5, 1.0]):
+        live = LiveIndex(b.index, delta_cap=cap)
+        rng = np.random.default_rng(17)
+        live.add(_corpus_like(rng, b.corpus.docs, int(frac * cap)))
+        reg = IndexRegistry(version_of(live))
+        tag = f"delta_occ_{frac:.2f}"
+        out[tag] = _run(ws(registry=reg), qs, exact=exact)
+        out[tag]["delta_occupancy"] = live.delta.occupancy()
+        r = out[tag]
+        print(f"{tag:14s} occ={r['occupancy']:.2f} "
+              f"C={r['mean_probes']:5.1f} R*@k={r['recall']:.3f} "
+              f"wall={r['wall_s']:.1f}s")
+
+    # mixed query/mutation stream: adds+deletes per wave, background
+    # merge_delta every few waves, atomic version swaps mid-stream
+    live = LiveIndex(b.index, delta_cap=cap)
+    reg = IndexRegistry(version_of(live))
+    rng = np.random.default_rng(23)
+    added: list = []
+    stats = {"adds": 0, "deletes": 0, "merges": 0}
+    rate = 4 if smoke else 8
+
+    def mutate(wave: int) -> None:
+        try:
+            added.extend(int(i)
+                         for i in live.add(_corpus_like(rng, b.corpus.docs,
+                                                        rate)))
+            stats["adds"] += rate
+        except DeltaFull:
+            live.merge_delta()
+            stats["merges"] += 1
+        if len(added) > rate:
+            live.delete([added.pop(rng.integers(len(added)))
+                         for _ in range(rate // 4)])
+            stats["deletes"] += rate // 4
+        if wave % 8 == 0 and len(live.delta):
+            live.merge_delta()
+            stats["merges"] += 1
+        reg.publish(version_of(live))
+
+    row = _run(ws(registry=reg), qs, on_wave=mutate, exact=exact)
+    row.update(stats)
+    row["versions"] = live.version
+    row["swaps"] = reg.swaps
+    row["recall_static"] = out["fused"]["recall"]
+    row["recall_gap"] = abs(row["recall"] - out["fused"]["recall"])
+    out["live_stream"] = row
+    print(f"{'live_stream':14s} adds={stats['adds']} "
+          f"dels={stats['deletes']} merges={stats['merges']} "
+          f"R*@k={row['recall']:.3f} gap={row['recall_gap']:.4f} "
+          f"wall={row['wall_s']:.1f}s")
+
     sp = out["baseline"]["lane_steps"] / out["compact"]["lane_steps"]
     print(f"compaction device-time speedup: {sp:.2f}x")
     same = out["fused"]["mean_probes"] == out["compact"]["mean_probes"]

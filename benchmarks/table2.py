@@ -22,8 +22,9 @@ PHI = 95.0
 EXIT_W = 3.0
 
 
-def run_encoder(name: str, *, quick: bool = False) -> List[Dict]:
-    b = load_bench(name)
+def run_encoder(name: str, *, quick: bool = False,
+                smoke: bool = False) -> List[Dict]:
+    b = load_bench(name, smoke=smoke)
     sp = b.splits
     n = b.n_probe
     q_test = jnp.asarray(b.corpus.queries[sp["test"]])
@@ -32,7 +33,9 @@ def run_encoder(name: str, *, quick: bool = False) -> List[Dict]:
     pm = train_policy_models(
         b.index, b.corpus.docs, b.corpus.queries[sp["train"]],
         b.corpus.queries[sp["valid"]], n_probe=n, k=K, tau=TAU,
-        exit_weight=EXIT_W, n_trees=30 if quick else 80, max_depth=5)
+        exit_weight=EXIT_W,
+        n_trees=10 if smoke else (30 if quick else 80),
+        max_depth=3 if smoke else 5)
     delta = DELTAS[name]
     pols = {
         f"A-kNN95(N={n})": policies.fixed(n, k=K, tau=TAU),
@@ -74,10 +77,11 @@ def run_encoder(name: str, *, quick: bool = False) -> List[Dict]:
     return rows
 
 
-def main(quick: bool = False) -> List[Dict]:
+def main(quick: bool = False, smoke: bool = False) -> List[Dict]:
     all_rows = []
-    for enc in ENCODERS:
-        rows = run_encoder(enc, quick=quick)
+    encoders = ["star-like"] if smoke else list(ENCODERS)
+    for enc in encoders:
+        rows = run_encoder(enc, quick=quick, smoke=smoke)
         print(f"\n== {enc} (N={rows[0]['strategy']}) ==")
         hdr = f"{'strategy':22s} {'R*@1':>6s} {'R@K':>6s} {'mRR@10':>7s} " \
               f"{'C':>7s} {'T(ms)':>8s} {'Sp':>5s}"

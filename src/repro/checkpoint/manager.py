@@ -138,3 +138,22 @@ class CheckpointManager:
         else:
             arrays = [jnp.asarray(a) for a in arrays]
         return step, jax.tree_util.tree_unflatten(treedef, arrays)
+
+    def load_arrays(self, step: Optional[int] = None
+                    ) -> Tuple[int, Dict[str, np.ndarray]]:
+        """Load a checkpoint as ``{key: host array}`` without a pytree
+        template.  Keys come from ``jax.tree_util.keystr`` at save time
+        (a dict tree saves ``"['name']"``; the surrounding quoting is
+        stripped so callers see plain ``name``)."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        path = os.path.join(self.root, f"step_{step:08d}")
+        with open(os.path.join(path, "index.json")) as f:
+            index = json.load(f)
+        out: Dict[str, np.ndarray] = {}
+        for e in index["keys"]:
+            key = e["key"].strip("[]'\"")
+            out[key] = np.load(os.path.join(path, e["file"]))
+        return step, out

@@ -55,6 +55,52 @@ class IVFIndex:
         return self.centroids.shape[1]
 
 
+class DeltaView(NamedTuple):
+    """Device view of the live-mutation delta buffer (``repro.index``).
+
+    Fixed-capacity arrays; empty (or tombstoned) slots carry id -1.
+    ``assign`` is the nearest-centroid cluster each buffered vector
+    will be merged into, which gates *when* it becomes visible to a
+    query: a delta vector is merged into the running top-k at the
+    probe of its assigned cluster, so results are bit-identical to a
+    rebuilt index holding the same net corpus for every exit policy.
+    """
+    vecs: jnp.ndarray     # (cap, d) f32
+    ids: jnp.ndarray      # (cap,) int32 external doc ids, -1 empty
+    assign: jnp.ndarray   # (cap,) int32 assigned cluster, -1 empty
+
+
+def validate_alignment(index: IVFIndex, *, blk_l: int = 64) -> None:
+    """Eagerly enforce the fused-kernel layout contract.
+
+    The Pallas scan kernels stream ``(blk_l, d)`` tiles addressed by
+    scalar-prefetched *block* offsets, so every inverted-list offset
+    must be a ``blk_l`` multiple and ``list_pad`` must be divisible by
+    ``blk_l`` — otherwise the kernel would silently score the wrong
+    rows.  Raises ``ValueError`` with a pointer at ``build_index``
+    instead.  No-op for abstract (ShapeDtypeStruct) indexes.
+    """
+    if blk_l <= 0:
+        raise ValueError(f"blk_l must be positive, got {blk_l}")
+    if index.list_pad % blk_l:
+        raise ValueError(
+            f"list_pad={index.list_pad} is not a multiple of blk_l="
+            f"{blk_l}; rebuild with build_index(list_pad=<{blk_l}"
+            f"-multiple>) or pass a compatible blk_l")
+    offs = index.cluster_offsets
+    if not hasattr(offs, "__array__"):          # abstract dry-run index
+        return
+    offs = np.asarray(offs)
+    bad = np.nonzero(offs % blk_l)[0]
+    if bad.size:
+        raise ValueError(
+            f"{bad.size} inverted-list offsets are not blk_l={blk_l} "
+            f"aligned (first bad cluster {int(bad[0])}, offset "
+            f"{int(offs[bad[0]])}); the fused scan kernel would stream "
+            f"misaligned tiles and compute garbage. Rebuild the index "
+            f"with build_index(align={blk_l}) (or a multiple).")
+
+
 def build_index(docs: np.ndarray, n_clusters: int, *, list_pad: int = 256,
                 n_iters: int = 10, seed: int = 0,
                 align: int = 64) -> IVFIndex:
@@ -64,6 +110,12 @@ def build_index(docs: np.ndarray, n_clusters: int, *, list_pad: int = 256,
     rows (gap rows id=-1), so the Pallas scan kernel can stream
     (align, d) tiles with block-aligned scalar-prefetch offsets.
     """
+    if align <= 0:
+        raise ValueError(f"align must be positive, got {align}")
+    if list_pad % align:
+        raise ValueError(
+            f"list_pad={list_pad} must be a multiple of align={align} "
+            f"so list offsets stay tile-aligned for the scan kernels")
     docs = np.asarray(docs, np.float32)
     centroids, assign = km.kmeans(docs, n_clusters, n_iters=n_iters, seed=seed)
     centroids, assign = km.split_oversized(docs, centroids, assign, list_pad,
@@ -147,12 +199,29 @@ def _probe_tiles(index: IVFIndex, cids: jnp.ndarray
     ids = jax.vmap(
         lambda o: jax.lax.dynamic_slice_in_dim(index.doc_ids, o, lp, axis=0))(offs)
     mask = jnp.arange(lp)[None, :] < sizes[:, None]
-    return tiles, jnp.where(mask, ids, -1), mask
+    ids = jnp.where(mask, ids, -1)
+    # stored id -1 inside a list == tombstoned doc: mask it like padding
+    return tiles, ids, mask & (ids >= 0)
+
+
+def _scrub_dead(scores: jnp.ndarray, ids: jnp.ndarray, dead: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mask candidates whose external id is tombstoned.
+
+    ``dead`` is the cumulative (id_capacity,) bool lookup from
+    ``repro.index``; needed when a running top-k can carry ids that
+    were deleted *after* they were merged (version swaps mid-query)."""
+    gone = jnp.take(dead, jnp.clip(ids, 0, dead.shape[0] - 1)) & (ids >= 0)
+    return (jnp.where(gone, -jnp.inf, scores), jnp.where(gone, -1, ids))
 
 
 def _merge_topk(scores: jnp.ndarray, ids: jnp.ndarray, new_scores: jnp.ndarray,
-                new_ids: jnp.ndarray, k: int, use_kernel: bool = False
+                new_ids: jnp.ndarray, k: int, use_kernel: bool = False,
+                dead: Optional[jnp.ndarray] = None
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if dead is not None:
+        scores, ids = _scrub_dead(scores, ids, dead)
+        new_scores, new_ids = _scrub_dead(new_scores, new_ids, dead)
     if use_kernel:
         from repro.kernels import ops as kops
         return kops.topk_merge(scores, ids, new_scores, new_ids, k)
@@ -163,13 +232,11 @@ def _merge_topk(scores: jnp.ndarray, ids: jnp.ndarray, new_scores: jnp.ndarray,
     return top_s, top_i
 
 
-@functools.partial(
-    jax.jit, static_argnames=("use_scan_kernel", "use_topk_kernel",
-                              "use_fused_kernel", "chunk"))
 def search(index: IVFIndex, queries: jnp.ndarray, policy: Policy, *,
+           delta: Optional[DeltaView] = None,
            use_scan_kernel: bool = False, use_topk_kernel: bool = False,
-           use_fused_kernel: bool = False, chunk: int = 1
-           ) -> SearchResult:
+           use_fused_kernel: bool = False, chunk: int = 1,
+           blk_l: int = 64) -> SearchResult:
     """Batched adaptive A-kNN: probe clusters in similarity order with
     per-query early exit.
 
@@ -188,7 +255,33 @@ def search(index: IVFIndex, queries: jnp.ndarray, policy: Policy, *,
     dispatch per chunk, raw scores never leave VMEM, and the patience
     signal phi is recovered from the kernel's per-probe new-entry
     counts instead of re-running ``intersection_pct``.
+
+    ``delta`` (live-mutation subsystem, ``repro.index``): a fixed-
+    capacity buffer of recently added vectors.  It is brute-force
+    scored once at probe 0 (``ops.delta_scan``), and each entry is
+    merged into the running top-k at the probe of its *assigned*
+    cluster, so phi/patience accounting — and therefore the result —
+    is bit-identical to searching a rebuilt index that physically
+    contains the delta docs in those lists.  Tombstoned docs carry
+    stored id -1 and are masked on every path.
     """
+    if use_fused_kernel or use_scan_kernel:
+        # the kernels trust blk_l-aligned offsets: fail loudly up front
+        validate_alignment(index, blk_l=blk_l)
+    return _search(index, queries, policy, delta,
+                   use_scan_kernel=use_scan_kernel,
+                   use_topk_kernel=use_topk_kernel,
+                   use_fused_kernel=use_fused_kernel, chunk=chunk,
+                   blk_l=blk_l)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("use_scan_kernel", "use_topk_kernel",
+                              "use_fused_kernel", "chunk", "blk_l"))
+def _search(index: IVFIndex, queries: jnp.ndarray, policy: Policy,
+            delta: Optional[DeltaView], *, use_scan_kernel: bool,
+            use_topk_kernel: bool, use_fused_kernel: bool, chunk: int,
+            blk_l: int) -> SearchResult:
     B, d = queries.shape
     k, N, tau = policy.k, policy.n_probe, policy.tau
     nc = index.n_clusters
@@ -200,20 +293,32 @@ def search(index: IVFIndex, queries: jnp.ndarray, policy: Policy, *,
     csims = queries @ index.centroids.T                       # (B, C)
     rank_sims, cluster_rank = jax.lax.top_k(csims, n_rank)    # (B, N)
 
-    def probe_scores(state_h):
-        cids = jnp.take_along_axis(
-            cluster_rank, state_h[:, None], axis=1)[:, 0]
+    if delta is not None:
+        from repro.kernels import ops as kops
+        # probe-0 brute-force scan of the whole delta buffer; each
+        # entry is *merged* only at the probe of its assigned cluster
+        d_sc = kops.delta_scan(queries, delta.vecs)           # (B, cap)
+        d_valid = (delta.ids >= 0)[None, :]                   # (1, cap)
+        d_ids = jnp.broadcast_to(delta.ids[None, :], d_sc.shape)
+
+    def delta_candidates(gate):
+        """(B, cap) gated delta candidates: -inf / -1 outside gate."""
+        return (jnp.where(gate, d_sc, -jnp.inf),
+                jnp.where(gate, d_ids, -1))
+
+    def probe_scores(cids):
         if use_scan_kernel:
             from repro.kernels import ops as kops
             lp = index.list_pad
             offs = jnp.take(index.cluster_offsets, cids)
             sizes = jnp.take(index.cluster_sizes, cids)
             sc = kops.ivf_scan(queries, index.docs, offs, sizes,
-                               list_pad=lp)
+                               list_pad=lp, blk_l=blk_l)
             ids = jax.vmap(lambda o: jax.lax.dynamic_slice_in_dim(
                 index.doc_ids, o, lp, axis=0))(offs)
             mask = jnp.arange(lp)[None, :] < sizes[:, None]
-            return sc, jnp.where(mask, ids, -1)
+            ids = jnp.where(mask, ids, -1)
+            return jnp.where(ids >= 0, sc, -jnp.inf), ids
         tiles, ids, mask = _probe_tiles(index, cids)
         sc = jnp.einsum("bld,bd->bl", tiles, queries)
         return jnp.where(mask, sc, -jnp.inf), ids
@@ -289,16 +394,47 @@ def search(index: IVFIndex, queries: jnp.ndarray, policy: Policy, *,
             snap_s, snap_i, cnts = kops.ivf_scan_merge(
                 queries, index.docs, index.doc_ids, offs, sizes,
                 s.topk_scores, s.topk_ids, k=k,
-                list_pad=index.list_pad, chunk=chunk)
+                list_pad=index.list_pad, chunk=chunk, blk_l=blk_l)
         st = s
+        if use_fused_kernel and delta is not None:
+            # the kernel ran without delta entries; re-inject them per
+            # slot.  ``cum`` accumulates delta entries whose assigned
+            # cluster was probed at any slot <= t of this chunk: merging
+            # them into the slot's top-k snapshot reproduces the exact
+            # sequential merge (dropping a non-top-k candidate early
+            # can never change a later top-k), and the corrected state
+            # feeds the next dispatch's running top-k.
+            cum = jnp.zeros((B, d_sc.shape[1]), bool)
         for t in range(chunk):
             if use_fused_kernel:
-                phi_pre = 100.0 * (k - cnts[:, t]).astype(jnp.float32) / k
-                st = slot_update(st, snap_s[:, t], snap_i[:, t], phi_pre)
+                if delta is not None:
+                    slot_ok = s.h + t < n_rank
+                    cum = cum | (d_valid & slot_ok
+                                 & (delta.assign[None, :]
+                                    == cids[:, t][:, None]))
+                    e_s, e_i = delta_candidates(cum)
+                    m_s, m_i = _merge_topk(snap_s[:, t], snap_i[:, t],
+                                           e_s, e_i, k, use_topk_kernel)
+                    # counts-phi is stale once delta entries join the
+                    # merge: recompute from id intersections instead
+                    st = slot_update(st, m_s, m_i, None)
+                else:
+                    phi_pre = (100.0
+                               * (k - cnts[:, t]).astype(jnp.float32) / k)
+                    st = slot_update(st, snap_s[:, t], snap_i[:, t],
+                                     phi_pre)
             else:
                 probe_idx = jnp.broadcast_to(
                     jnp.minimum(st.h, n_rank - 1), (B,))
-                new_scores, new_ids = probe_scores(probe_idx)
+                cids = jnp.take_along_axis(
+                    cluster_rank, probe_idx[:, None], axis=1)[:, 0]
+                new_scores, new_ids = probe_scores(cids)
+                if delta is not None:
+                    gate = d_valid & (delta.assign[None, :]
+                                      == cids[:, None])
+                    e_s, e_i = delta_candidates(gate)
+                    new_scores = jnp.concatenate([new_scores, e_s], 1)
+                    new_ids = jnp.concatenate([new_ids, e_i], 1)
                 m_s, m_i = _merge_topk(st.topk_scores, st.topk_ids,
                                        new_scores, new_ids, k,
                                        use_topk_kernel)

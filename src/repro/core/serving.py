@@ -20,8 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ivf import (IVFIndex, _merge_topk, _probe_tiles,
-                            intersection_pct)
+from repro.core.ivf import (DeltaView, IVFIndex, _merge_topk, _probe_tiles,
+                            _scrub_dead, intersection_pct,
+                            validate_alignment)
 
 
 class LaneState(NamedTuple):
@@ -77,7 +78,9 @@ def _admit(state: LaneState, centroids: jnp.ndarray, new_q: jnp.ndarray,
 @functools.partial(jax.jit,
                    static_argnames=("chunk", "k", "n_probe", "delta",
                                     "use_fused"))
-def _advance(index: IVFIndex, state: LaneState, *, chunk: int, k: int,
+def _advance(index: IVFIndex, state: LaneState,
+             dview: Optional[DeltaView] = None,
+             dead: Optional[jnp.ndarray] = None, *, chunk: int, k: int,
              n_probe: int, delta: int, phi: float,
              use_fused: bool = True) -> LaneState:
     """Advance every active lane by up to ``chunk`` probes.
@@ -89,7 +92,33 @@ def _advance(index: IVFIndex, state: LaneState, *, chunk: int, k: int,
     lane state is rolled forward slot by slot from the kernel's
     per-probe top-k snapshots, so mid-chunk exits land on the exact
     probe they would have on the unfused path.
+
+    ``dview``/``dead`` (live-mutation overlay, ``repro.index``): delta
+    entries are brute-force scored once per wave and merged into a
+    lane's running top-k at the probe of their assigned cluster (same
+    bit-identity rule as ``core.search``); ``dead`` is the cumulative
+    tombstone lookup, scrubbing running top-k entries that were deleted
+    after they were merged — required for mid-flight lanes that span an
+    index version swap.
     """
+
+    if dead is not None:
+        # scrub once per wave: a lane's carry may predate a deletion
+        ts0, ti0 = _scrub_dead(state.topk_scores, state.topk_ids, dead)
+        state = state._replace(topk_scores=ts0, topk_ids=ti0)
+
+    if dview is not None:
+        from repro.kernels import ops as kops
+        d_sc = kops.delta_scan(state.qvec, dview.vecs)     # (W, cap)
+        d_valid = (dview.ids >= 0)[None, :]
+        if dead is not None:
+            d_valid = d_valid & ~jnp.take(
+                dead, jnp.clip(dview.ids, 0, dead.shape[0] - 1))[None, :]
+        d_ids = jnp.broadcast_to(dview.ids[None, :], d_sc.shape)
+
+    def delta_cands(gate):
+        return (jnp.where(gate, d_sc, -jnp.inf),
+                jnp.where(gate, d_ids, -1))
 
     def slot(st: LaneState, ms, mi, phi_v) -> LaneState:
         act = st.active[:, None]
@@ -117,9 +146,23 @@ def _advance(index: IVFIndex, state: LaneState, *, chunk: int, k: int,
             state.topk_scores, state.topk_ids, k=k,
             list_pad=index.list_pad, chunk=chunk)
         st = state
+        if dview is not None:
+            # the kernel ran without delta entries; re-inject them with
+            # the cumulative per-slot mask (see core.ivf._search)
+            cum = jnp.zeros((state.qvec.shape[0], d_sc.shape[1]), bool)
         for t in range(chunk):
-            phi_v = 100.0 * (k - cnts[:, t]).astype(jnp.float32) / k
-            st = slot(st, snap_s[:, t], snap_i[:, t], phi_v)
+            if dview is not None:
+                cum = cum | (d_valid & slot_ok[:, t][:, None]
+                             & (dview.assign[None, :]
+                                == cids[:, t][:, None]))
+                e_s, e_i = delta_cands(cum)
+                ms, mi = _merge_topk(snap_s[:, t], snap_i[:, t],
+                                     e_s, e_i, k)
+                phi_v = intersection_pct(st.topk_ids, mi)
+                st = slot(st, ms, mi, phi_v)
+            else:
+                phi_v = 100.0 * (k - cnts[:, t]).astype(jnp.float32) / k
+                st = slot(st, snap_s[:, t], snap_i[:, t], phi_v)
         return st
 
     def body(_, st: LaneState) -> LaneState:
@@ -128,6 +171,11 @@ def _advance(index: IVFIndex, state: LaneState, *, chunk: int, k: int,
         tiles, ids, mask = _probe_tiles(index, cids)
         sc = jnp.einsum("bld,bd->bl", tiles, st.qvec)
         sc = jnp.where(mask, sc, -jnp.inf)
+        if dview is not None:
+            gate = d_valid & (dview.assign[None, :] == cids[:, None])
+            e_s, e_i = delta_cands(gate)
+            sc = jnp.concatenate([sc, e_s], axis=1)
+            ids = jnp.concatenate([ids, e_i], axis=1)
         ms, mi = _merge_topk(st.topk_scores, st.topk_ids, sc, ids, k)
         ti = jnp.where(st.active[:, None], mi, st.topk_ids)
         return slot(st, ms, mi, intersection_pct(st.topk_ids, ti))
@@ -145,12 +193,25 @@ class ServeReport:
 
 
 class WaveScheduler:
-    """Throughput-oriented serving loop over the adaptive search."""
+    """Throughput-oriented serving loop over the adaptive search.
+
+    ``registry`` (optional, ``repro.index.IndexRegistry``): between
+    waves the scheduler re-reads ``registry.current()`` and advances
+    against that version's (index, delta view, tombstones) — an atomic
+    swap point.  Mid-flight lanes stay correct across swaps: probes
+    already taken saw buffered docs through the delta overlay, probes
+    still to come see them inside the merged lists (centroids are fixed
+    under mutation, so each lane's cluster_rank stays valid), and the
+    per-wave tombstone scrub evicts results deleted after they were
+    merged.
+    """
 
     def __init__(self, index: IVFIndex, *, wave_size: int = 64,
                  chunk: int = 8, k: int = 100, n_probe: int = 80,
                  delta: int = 7, phi: float = 95.0,
-                 use_fused: bool = True):
+                 use_fused: bool = True, registry=None):
+        if use_fused:
+            validate_alignment(index)
         self.index = index
         self.w = wave_size
         self.chunk = chunk
@@ -159,9 +220,16 @@ class WaveScheduler:
         self.delta = delta
         self.phi = phi
         self.use_fused = use_fused
+        self.registry = registry
 
-    def serve(self, queries: np.ndarray, *, compact: bool = True
-              ) -> ServeReport:
+    def _version(self):
+        if self.registry is None:
+            return self.index, None, None
+        ver = self.registry.current()
+        return ver.index, ver.delta, ver.dead
+
+    def serve(self, queries: np.ndarray, *, compact: bool = True,
+              on_wave=None) -> ServeReport:
         d = queries.shape[1]
         state = _empty_state(self.w, d, self.n, self.k)
         next_q = 0
@@ -199,10 +267,13 @@ class WaveScheduler:
             lane_steps += self.w * self.chunk
             prev_active = active
             prev_state = state
-            state = _advance(self.index, state, chunk=self.chunk,
+            index, dview, dead = self._version()
+            state = _advance(index, state, dview, dead, chunk=self.chunk,
                              k=self.k, n_probe=self.n, delta=self.delta,
                              phi=self.phi, use_fused=self.use_fused)
             waves += 1
+            if on_wave is not None:
+                on_wave(waves)
         return ServeReport(results, probes, waves,
                            float(np.mean(occ)) if occ else 0.0,
                            lane_steps)

@@ -1,0 +1,6 @@
+"""Live index mutation: delta buffer, tombstones, versioned snapshots."""
+from repro.core.ivf import DeltaView
+from repro.index.delta import (DeltaBuffer, DeltaFull, Tombstones,
+                               assign_clusters)
+from repro.index.live import LiveIndex, relayout
+from repro.index.registry import IndexRegistry, IndexVersion, version_of

@@ -1,0 +1,156 @@
+"""Delta buffer + tombstone set: the mutable half of the live index.
+
+Both structures are host-coordinated (mutations arrive over the
+serving control plane, not inside jit) but expose fixed-shape device
+views so the hot search/serve paths never re-trace as documents come
+and go:
+
+* :class:`DeltaBuffer` — a fixed-capacity, append-only staging area
+  for recently added vectors.  Every entry records the cluster the
+  vector will be merged into (nearest centroid, the same assignment
+  rule ``merge_delta`` uses), which is what lets the overlay search
+  stay bit-identical to a rebuilt index.  Slots are never reordered:
+  within a cluster, merge order == insertion order == the order a
+  rebuilt list would hold.
+* :class:`Tombstones` — the cumulative set of deleted external doc
+  ids, plus a dense device lookup used to scrub running top-k state
+  that predates a deletion (mid-flight queries across version swaps).
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ivf import DeltaView
+
+
+class DeltaFull(RuntimeError):
+    """The delta buffer is out of slots — run ``merge_delta()``."""
+
+
+def assign_clusters(vecs: np.ndarray, centroids: np.ndarray) -> np.ndarray:
+    """Nearest-centroid assignment, same rule as the k-means builder
+    (``kmeans._assign_block``): argmax of x.c - 0.5|c|^2 (squared-L2
+    nearest centroid with the |x|^2 term dropped)."""
+    centroids = np.asarray(centroids, np.float32)
+    sims = np.asarray(vecs, np.float32) @ centroids.T \
+        - 0.5 * (centroids * centroids).sum(1)[None, :]
+    return np.argmax(sims, axis=1).astype(np.int32)
+
+
+class DeltaBuffer:
+    def __init__(self, dim: int, capacity: int = 1024, *,
+                 round_to: int = 128):
+        cap = max(round_to, -(-capacity // round_to) * round_to)
+        self.capacity = cap
+        self.vecs = np.zeros((cap, dim), np.float32)
+        self.ids = np.full(cap, -1, np.int32)
+        self.assign = np.full(cap, -1, np.int32)
+        self.count = 0                      # slots consumed (append ptr)
+        self._slot_of = {}                  # external id -> slot
+        self._view: Optional[DeltaView] = None
+
+    def __len__(self) -> int:
+        return int((self.ids >= 0).sum())
+
+    def occupancy(self) -> float:
+        return self.count / self.capacity
+
+    def add(self, vecs: np.ndarray, ids: np.ndarray,
+            assign: np.ndarray) -> None:
+        m = vecs.shape[0]
+        if self.count + m > self.capacity:
+            raise DeltaFull(
+                f"delta buffer full ({self.count}/{self.capacity} slots "
+                f"used, {m} more requested): call merge_delta() first")
+        sl = slice(self.count, self.count + m)
+        self.vecs[sl] = vecs
+        self.ids[sl] = ids
+        self.assign[sl] = assign
+        for j, i in enumerate(ids):
+            self._slot_of[int(i)] = self.count + j
+        self.count += m
+        self._view = None
+
+    def delete(self, doc_id: int) -> bool:
+        """Tombstone a buffered entry in place (slot stays consumed so
+        insertion order of the survivors is preserved)."""
+        slot = self._slot_of.pop(int(doc_id), None)
+        if slot is None:
+            return False
+        self.ids[slot] = -1
+        self._view = None
+        return True
+
+    def live_slots(self) -> np.ndarray:
+        """Slots holding a live entry, in insertion order."""
+        return np.nonzero(self.ids[: self.count] >= 0)[0]
+
+    def compact_keep(self, slots: np.ndarray) -> None:
+        """Drop everything except ``slots`` (merge spill-back): the
+        kept entries move to the front, preserving their order."""
+        slots = np.asarray(slots, np.int64)
+        m = slots.size
+        self.vecs[:m] = self.vecs[slots]
+        self.ids[:m] = self.ids[slots]
+        self.assign[:m] = self.assign[slots]
+        self.vecs[m:] = 0.0
+        self.ids[m:] = -1
+        self.assign[m:] = -1
+        self.count = m
+        self._slot_of = {int(i): s for s, i in enumerate(self.ids[:m])}
+        self._view = None
+
+    def view(self) -> DeltaView:
+        """Fixed-shape device view (cached until the next mutation).
+
+        The buffers are COPIED: on CPU ``jnp.asarray`` may alias numpy
+        memory, and with async dispatch a later in-place mutation
+        (``add``/``compact_keep``) could corrupt a still-executing
+        search that captured this view."""
+        if self._view is None:
+            self._view = DeltaView(jnp.asarray(self.vecs.copy()),
+                                   jnp.asarray(self.ids.copy()),
+                                   jnp.asarray(self.assign.copy()))
+        return self._view
+
+
+class Tombstones:
+    def __init__(self, id_capacity: int, *, round_to: int = 4096):
+        self._cap = max(round_to, -(-id_capacity // round_to) * round_to)
+        self._dead = np.zeros(self._cap, bool)
+        self._round = round_to
+        self.count = 0
+        self._lookup: Optional[jnp.ndarray] = None
+
+    def ensure_capacity(self, n_ids: int) -> None:
+        if n_ids <= self._cap:
+            return
+        cap = -(-n_ids // self._round) * self._round
+        grown = np.zeros(cap, bool)
+        grown[: self._cap] = self._dead
+        self._dead, self._cap = grown, cap
+        self._lookup = None
+
+    def add(self, ids: Iterable[int]) -> None:
+        for i in ids:
+            if not self._dead[int(i)]:
+                self._dead[int(i)] = True
+                self.count += 1
+        self._lookup = None
+
+    def __contains__(self, doc_id: int) -> bool:
+        i = int(doc_id)
+        return 0 <= i < self._cap and bool(self._dead[i])
+
+    def dead_ids(self) -> np.ndarray:
+        return np.nonzero(self._dead)[0].astype(np.int32)
+
+    def lookup(self) -> jnp.ndarray:
+        """(id_capacity,) bool device array for running-top-k scrubs.
+        Copied for the same aliasing reason as ``DeltaBuffer.view``."""
+        if self._lookup is None:
+            self._lookup = jnp.asarray(self._dead.copy())
+        return self._lookup

@@ -1,0 +1,104 @@
+"""Versioned snapshot registry: atomic publish/subscribe of index state.
+
+``search()``/``WaveScheduler`` read an :class:`IndexVersion` (immutable
+snapshot of main index + delta view + dead lookup); the mutation path
+publishes a fresh one whenever state changes.  Readers pick up the new
+version between waves — never mid-wave — so every in-flight probe loop
+sees one coherent (index, delta, tombstones) triple.
+
+Snapshots round-trip through ``checkpoint.CheckpointManager`` (atomic
+dir-rename publish, one .npy per array), so a serving process can be
+restarted from the last published version without replaying mutations.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ivf import DeltaView, IVFIndex
+
+
+@dataclass(frozen=True)
+class IndexVersion:
+    """One immutable, publishable snapshot of the live index."""
+    version: int
+    index: IVFIndex
+    delta: DeltaView
+    dead: jnp.ndarray          # (id_capacity,) bool tombstone lookup
+    next_id: int
+
+
+def version_of(live, *, version: Optional[int] = None) -> IndexVersion:
+    """Snapshot a :class:`repro.index.live.LiveIndex`."""
+    return IndexVersion(
+        version=live.seq if version is None else version,
+        index=live.index,
+        delta=live.delta_view(),
+        dead=live.dead_lookup(),
+        next_id=live.next_id)
+
+
+class IndexRegistry:
+    """Thread-safe single-slot publish/subscribe for IndexVersions."""
+
+    def __init__(self, initial: Optional[IndexVersion] = None):
+        self._lock = threading.Lock()
+        self._current: Optional[IndexVersion] = None
+        self.swaps = 0
+        if initial is not None:
+            self.publish(initial)
+
+    def publish(self, ver: IndexVersion) -> IndexVersion:
+        with self._lock:
+            if self._current is not None and \
+                    ver.version <= self._current.version:
+                ver = IndexVersion(self._current.version + 1, ver.index,
+                                   ver.delta, ver.dead, ver.next_id)
+            self._current = ver
+            self.swaps += 1
+            return ver
+
+    def current(self) -> IndexVersion:
+        with self._lock:
+            if self._current is None:
+                raise RuntimeError("registry holds no published version")
+            return self._current
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, manager) -> str:
+        """Write the current version through a CheckpointManager."""
+        ver = self.current()
+        ix = ver.index
+        tree = {
+            "centroids": ix.centroids, "docs": ix.docs,
+            "doc_ids": ix.doc_ids, "offsets": ix.cluster_offsets,
+            "sizes": ix.cluster_sizes,
+            "dvecs": ver.delta.vecs, "dids": ver.delta.ids,
+            "dassign": ver.delta.assign, "dead": ver.dead,
+            "meta": np.asarray(
+                [ix.list_pad, ver.version, ver.next_id], np.int64),
+        }
+        return manager.save(ver.version, tree)
+
+    @staticmethod
+    def restore(manager, step: Optional[int] = None
+                ) -> Tuple["IndexRegistry", IndexVersion]:
+        step, arrs = manager.load_arrays(step)
+        list_pad, version, next_id = (int(x) for x in arrs["meta"])
+        ver = IndexVersion(
+            version=version,
+            index=IVFIndex(jnp.asarray(arrs["centroids"]),
+                           jnp.asarray(arrs["docs"]),
+                           jnp.asarray(arrs["doc_ids"]),
+                           jnp.asarray(arrs["offsets"]),
+                           jnp.asarray(arrs["sizes"]), list_pad),
+            delta=DeltaView(jnp.asarray(arrs["dvecs"]),
+                            jnp.asarray(arrs["dids"]),
+                            jnp.asarray(arrs["dassign"])),
+            dead=jnp.asarray(arrs["dead"]),
+            next_id=next_id)
+        return IndexRegistry(ver), ver

@@ -121,9 +121,13 @@ def _kernel(boffs_ref, sizes_ref, q_ref, docs_ref, ids_ref, ins_ref,
         new_i = ibuf[...].reshape(1, list_pad)
         lane = jax.lax.broadcasted_iota(jnp.int32, (1, list_pad), 1)
         in_list = lane < size
-        new_s = jnp.where(in_list, new_s, NEG)
         new_i = jnp.where(in_list, new_i, -1)
-        new_t = jnp.where(in_list, j, -1)
+        # tombstones: deleted rows keep their vector but their stored id
+        # is burned to -1 (repro.index.live), so masking id < 0 hides
+        # both padding and deleted docs without an extra input stream
+        alive = in_list & (new_i >= 0)
+        new_s = jnp.where(alive, new_s, NEG)
+        new_t = jnp.where(alive, j, -1)
         cand_s = jnp.concatenate([ts[:, :k], new_s], axis=1)
         cand_i = jnp.concatenate([ti[:, :k], new_i], axis=1)
         cand_t = jnp.concatenate([tt[:, :k], new_t], axis=1)

@@ -13,6 +13,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import delta_scan as _ds
 from repro.kernels import embedding_bag as _eb
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ivf_scan as _scan
@@ -68,6 +69,15 @@ def ivf_scan_merge(queries, docs, doc_ids, offsets, sizes, run_scores,
     # sentinel -> -inf so empty slots match the XLA merge convention
     out_s = jnp.where(out_s > _sm.VALID_MIN, out_s, -jnp.inf)
     return out_s, out_i, cnt
+
+
+@functools.partial(jax.jit, static_argnames=("blk_b", "blk_c"))
+def delta_scan(queries, vecs, *, blk_b: int = 8, blk_c: int = 128):
+    """Brute-force scan of the live-mutation delta buffer: (B,d) x
+    (cap,d) -> (B,cap) raw scores (callers mask empty/tombstoned slots
+    by ``ids >= 0``)."""
+    return _ds.delta_scan(queries, vecs, blk_b=blk_b, blk_c=blk_c,
+                          interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("k", "blk_b"))

@@ -71,8 +71,9 @@ def ivf_scan_merge_ref(queries: jnp.ndarray, docs: jnp.ndarray,
         sc = jnp.einsum("bld,bd->bl", tiles.astype(jnp.float32),
                         queries.astype(jnp.float32))
         mask = jnp.arange(list_pad)[None] < sizes[:, t][:, None]
-        sc = jnp.where(mask, sc, -jnp.inf)
         tids = jnp.where(mask, tids, -1)
+        # id < 0 == padding or tombstoned row: never a candidate
+        sc = jnp.where(mask & (tids >= 0), sc, -jnp.inf)
         ns, ni = topk_merge_ref(s, i, sc, tids, k)
         inter = jnp.sum((i[:, :, None] == ni[:, None, :])
                         & (i[:, :, None] >= 0), axis=(1, 2))
@@ -82,6 +83,11 @@ def ivf_scan_merge_ref(queries: jnp.ndarray, docs: jnp.ndarray,
         s, i = ns, ni
     return (jnp.stack(snap_s, axis=1), jnp.stack(snap_i, axis=1),
             jnp.stack(cnts, axis=1))
+
+
+def delta_scan_ref(queries: jnp.ndarray, vecs: jnp.ndarray) -> jnp.ndarray:
+    """queries (B,d) x delta vecs (cap,d) -> (B,cap) raw f32 scores."""
+    return queries.astype(jnp.float32) @ vecs.astype(jnp.float32).T
 
 
 def embedding_bag_ref(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:

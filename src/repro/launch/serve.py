@@ -4,6 +4,14 @@ paper's effectiveness/efficiency metrics.
 
     PYTHONPATH=src python -m repro.launch.serve --policy patience \
         --n-docs 50000 --queries 1024
+
+Live mutation (``repro.index``): ``--mutation-rate R`` injects R
+document adds per wave (plus R//4 deletes of previously added docs)
+*while the query stream is in flight*, through a ``LiveIndex`` +
+``IndexRegistry`` pair; ``--merge-every M`` folds the delta buffer
+into a fresh immutable index version every M waves.  The driver then
+reports live-vs-static recall so regressions in the overlay path are
+visible at the CLI.
 """
 from __future__ import annotations
 
@@ -16,6 +24,17 @@ import numpy as np
 from repro.core import build_index, brute_force, metrics, policies, search
 from repro.core.serving import WaveScheduler
 from repro.data.synthetic import clustered_corpus
+from repro.index import DeltaFull, IndexRegistry, LiveIndex, version_of
+
+
+def _serve(ws, queries, *, compact, on_wave=None):
+    t1 = time.time()
+    rep = ws.serve(queries, compact=compact, on_wave=on_wave)
+    wall = (time.time() - t1) * 1000
+    n = queries.shape[0]
+    ids = np.stack([rep.results[i] for i in range(n)])
+    probes = np.array([rep.probes[i] for i in range(n)])
+    return rep, ids, probes, wall
 
 
 def main() -> None:
@@ -32,6 +51,14 @@ def main() -> None:
     ap.add_argument("--phi", type=float, default=95.0)
     ap.add_argument("--wave-size", type=int, default=128)
     ap.add_argument("--no-compact", action="store_true")
+    ap.add_argument("--mutation-rate", type=int, default=0,
+                    help="doc adds per wave (deletes at rate//4) "
+                         "streamed against the live index")
+    ap.add_argument("--merge-every", type=int, default=16,
+                    help="fold the delta buffer into a new index "
+                         "version every N waves")
+    ap.add_argument("--delta-cap", type=int, default=4096,
+                    help="delta buffer capacity (slots)")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -56,16 +83,66 @@ def main() -> None:
     ws = WaveScheduler(index, wave_size=args.wave_size, chunk=4,
                        k=args.k, n_probe=args.n_probe, delta=args.delta,
                        phi=args.phi)
-    t1 = time.time()
-    rep = ws.serve(c.queries, compact=not args.no_compact)
-    wall = (time.time() - t1) * 1000
-    ids = np.stack([rep.results[i] for i in range(args.queries)])
-    probes = np.array([rep.probes[i] for i in range(args.queries)])
+    rep, ids, probes, wall = _serve(ws, c.queries,
+                                    compact=not args.no_compact)
     summ = metrics.summarize(ids, probes, exact, c.relevant, wall)
     summ["occupancy"] = round(rep.occupancy, 3)
     summ["waves"] = rep.waves
     print({k: round(v, 4) if isinstance(v, float) else v
            for k, v in summ.items()})
+
+    if args.mutation_rate <= 0:
+        return
+
+    # --- mixed query/mutation stream over the live index ------------------
+    live = LiveIndex(index, delta_cap=args.delta_cap)
+    reg = IndexRegistry(version_of(live))
+    ws_live = WaveScheduler(index, wave_size=args.wave_size, chunk=4,
+                            k=args.k, n_probe=args.n_probe,
+                            delta=args.delta, phi=args.phi, registry=reg)
+    rng = np.random.default_rng(1)
+    added: list[int] = []
+    stats = {"adds": 0, "deletes": 0, "merges": 0}
+
+    def mutate(wave: int) -> None:
+        # corpus-like churn: noisy copies of existing docs, so added
+        # vectors score on the same scale as the static corpus
+        src = rng.integers(0, args.n_docs, args.mutation_rate)
+        new = (c.docs[src]
+               + rng.normal(scale=0.05, size=(args.mutation_rate,
+                                              args.dim))
+               ).astype(np.float32)
+        try:
+            added.extend(int(i) for i in live.add(new))
+            stats["adds"] += args.mutation_rate
+        except DeltaFull:
+            live.merge_delta()
+            stats["merges"] += 1
+        n_del = args.mutation_rate // 4
+        if n_del and len(added) > n_del:
+            doomed = [added.pop(rng.integers(len(added)))
+                      for _ in range(n_del)]
+            live.delete(doomed)
+            stats["deletes"] += n_del
+        if args.merge_every and wave % args.merge_every == 0 \
+                and len(live.delta):
+            live.merge_delta()
+            stats["merges"] += 1
+        reg.publish(version_of(live))
+
+    rep_l, ids_l, probes_l, wall_l = _serve(
+        ws_live, c.queries, compact=not args.no_compact, on_wave=mutate)
+    r_static = metrics.r_star_at_k(ids, exact)
+    r_live = metrics.r_star_at_k(ids_l, exact)
+    print({"mode": "live", "mutation_rate": args.mutation_rate,
+           "merge_every": args.merge_every, **stats,
+           "versions": live.version, "swaps": reg.swaps,
+           "delta_occupancy": round(live.delta.occupancy(), 3),
+           "recall_static": round(r_static, 4),
+           "recall_live": round(r_live, 4),
+           "recall_gap": round(abs(r_static - r_live), 4),
+           "latency_ms": round(wall_l, 1),
+           "mean_probes": round(float(probes_l.mean()), 2)})
 
 
 if __name__ == "__main__":

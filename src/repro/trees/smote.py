@@ -18,6 +18,8 @@ def smote(x: np.ndarray, y: np.ndarray, *, k: int = 5, seed: int = 0,
     y = np.asarray(y)
     rng = np.random.default_rng(seed)
     classes, counts = np.unique(y, return_counts=True)
+    if len(classes) == 1:
+        return x, y          # degenerate split: nothing to rebalance
     if len(classes) != 2:
         raise ValueError("smote expects binary labels")
     minority = classes[np.argmin(counts)]

@@ -1,0 +1,188 @@
+"""Live-mutation subsystem: the rebuild-equivalence invariant.
+
+A query against (main index + delta buffer + tombstones) must return
+bit-identical top-k ids and probe counts to the same query against a
+freshly rebuilt index containing the net corpus — for every exit
+policy, on both the per-probe and fused kernel paths.  That is the
+contract that makes `merge_delta` a pure background optimisation
+instead of a semantic event.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import brute_force, build_index, policies, search
+from repro.core.training import train_policy_models
+from repro.index import (DeltaFull, IndexRegistry, LiveIndex, relayout,
+                         version_of)
+
+
+@pytest.fixture(scope="module")
+def cascade_policy(tiny_index, tiny_corpus):
+    qs = tiny_corpus.queries
+    models = train_policy_models(
+        tiny_index, tiny_corpus.docs, qs[:128], qs[128:192],
+        n_probe=24, k=10, tau=3, n_trees=10, max_depth=3)
+    return policies.cascade_patience(
+        24, models.clf_weighted, delta=3, phi=90.0, k=10, tau=3)
+
+
+@pytest.fixture()
+def mutated(tiny_index, tiny_corpus):
+    """LiveIndex after a burst of adds and deletes (main + buffered)."""
+    live = LiveIndex(tiny_index, delta_cap=512)
+    rng = np.random.default_rng(11)
+    new = tiny_corpus.docs[rng.choice(len(tiny_corpus.docs), 160,
+                                      replace=False)]
+    new = new + rng.normal(scale=0.05, size=new.shape).astype(np.float32)
+    added = live.add(new)
+    live.delete(rng.choice(8000, 120, replace=False))     # main docs
+    live.delete(added[::5])                               # buffered docs
+    return live
+
+
+def _policy(name, cascade):
+    if name == "patience":
+        return policies.patience(24, delta=2, phi=90.0, k=10, tau=3)
+    if name == "fixed":
+        return policies.fixed(12, k=10, tau=3)
+    return cascade
+
+
+@pytest.mark.parametrize("fused", [False, True], ids=["perprobe", "fused"])
+@pytest.mark.parametrize("policy_name", ["fixed", "patience", "cascade"])
+def test_rebuild_equivalence(mutated, tiny_corpus, cascade_policy,
+                             policy_name, fused):
+    pol = _policy(policy_name, cascade_policy)
+    q = jnp.asarray(tiny_corpus.queries[:64])
+    kw = dict(use_fused_kernel=True, chunk=4) if fused else {}
+    live = mutated.search(q, pol, **kw)
+    rebuilt = search(mutated.rebuild_equivalent(), q, pol, **kw)
+    np.testing.assert_array_equal(np.asarray(live.topk_ids),
+                                  np.asarray(rebuilt.topk_ids))
+    np.testing.assert_array_equal(np.asarray(live.probes),
+                                  np.asarray(rebuilt.probes))
+    np.testing.assert_allclose(np.asarray(live.phi_hist),
+                               np.asarray(rebuilt.phi_hist), atol=1e-4)
+
+
+def test_full_probe_matches_brute_force(mutated, tiny_corpus):
+    """Probing every cluster over the live view == exact kNN over the
+    net corpus (external-id space)."""
+    q = jnp.asarray(tiny_corpus.queries[:32])
+    pol = policies.fixed(mutated.index.n_clusters, k=10, tau=3)
+    res = mutated.search(q, pol)
+    vecs, ids = mutated.net_corpus()
+    _, rows = brute_force(jnp.asarray(vecs), q, 10)
+    np.testing.assert_array_equal(np.asarray(res.topk_ids),
+                                  ids[np.asarray(rows)])
+
+
+def test_merge_delta_preserves_results(mutated, tiny_corpus):
+    q = jnp.asarray(tiny_corpus.queries[:48])
+    pol = policies.patience(24, delta=2, phi=90.0, k=10, tau=3)
+    before = mutated.search(q, pol)
+    n_live = mutated.n_live
+    ver = mutated.merge_delta()
+    assert ver == 1
+    assert len(mutated.delta) == 0          # everything fit
+    assert mutated.n_live == n_live
+    after = mutated.search(q, pol)
+    np.testing.assert_array_equal(np.asarray(before.topk_ids),
+                                  np.asarray(after.topk_ids))
+    np.testing.assert_array_equal(np.asarray(before.probes),
+                                  np.asarray(after.probes))
+
+
+def test_merge_delta_spills_overfull_cluster(tiny_index, tiny_corpus):
+    """Adds targeting one nearly-full cluster spill back into the
+    buffer instead of overflowing list_pad."""
+    live = LiveIndex(tiny_index, delta_cap=512)
+    c0 = np.asarray(tiny_index.centroids)[0]
+    rng = np.random.default_rng(3)
+    crowd = (c0[None, :]
+             + rng.normal(scale=1e-3, size=(300, c0.size))).astype(np.float32)
+    live.add(crowd)
+    assert (live.delta.assign[:300] == 0).all()
+    fill0 = int(np.asarray(tiny_index.cluster_sizes)[0])
+    live.merge_delta()
+    spilled = len(live.delta)
+    assert spilled == max(0, fill0 + 300 - tiny_index.list_pad)
+    assert spilled > 0
+    # spilled docs stay searchable through the overlay
+    q = jnp.asarray(tiny_corpus.queries[:16])
+    pol = policies.fixed(12, k=10, tau=3)
+    res = live.search(q, pol)
+    oracle = search(live.rebuild_equivalent(), q, pol)
+    np.testing.assert_array_equal(np.asarray(res.topk_ids),
+                                  np.asarray(oracle.topk_ids))
+
+
+def test_delete_semantics(tiny_index):
+    live = LiveIndex(tiny_index)
+    live.delete([5, 5, 17])                 # dup in one call
+    live.delete(5)                          # double delete: no-op
+    assert live.tombs.count == 2
+    assert live.n_live == 8000 - 2
+    with pytest.raises(ValueError, match="never allocated"):
+        live.delete(999999)
+
+
+def test_delta_full_raises(tiny_index, tiny_corpus):
+    live = LiveIndex(tiny_index, delta_cap=128)
+    with pytest.raises(DeltaFull, match="merge_delta"):
+        live.add(tiny_corpus.docs[:200])
+
+
+def test_alignment_validation(tiny_index, tiny_corpus):
+    from repro.core import validate_alignment
+    from repro.core.ivf import IVFIndex
+    with pytest.raises(ValueError, match="align"):
+        build_index(tiny_corpus.docs[:512], 4, list_pad=256, align=0)
+    with pytest.raises(ValueError, match="multiple of align"):
+        build_index(tiny_corpus.docs[:512], 4, list_pad=100, align=64)
+    skewed = IVFIndex(tiny_index.centroids, tiny_index.docs,
+                      tiny_index.doc_ids,
+                      tiny_index.cluster_offsets + 1,
+                      tiny_index.cluster_sizes, tiny_index.list_pad)
+    with pytest.raises(ValueError, match="aligned"):
+        validate_alignment(skewed)
+    q = jnp.asarray(tiny_corpus.queries[:4])
+    pol = policies.fixed(4, k=10, tau=3)
+    with pytest.raises(ValueError, match="build_index"):
+        search(skewed, q, pol, use_fused_kernel=True, chunk=2)
+
+
+def test_relayout_rejects_overfull_cluster(tiny_corpus):
+    vecs = tiny_corpus.docs[:300]
+    ids = np.arange(300, dtype=np.int32)
+    assign = np.zeros(300, np.int32)
+    cents = np.zeros((4, vecs.shape[1]), np.float32)
+    with pytest.raises(ValueError, match="list_pad"):
+        relayout(vecs, ids, assign, cents, list_pad=256)
+
+
+def test_registry_checkpoint_roundtrip(mutated, tiny_corpus, tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    reg = IndexRegistry(version_of(mutated))
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    reg.save(mgr)
+    reg2, ver = IndexRegistry.restore(mgr)
+    assert ver.next_id == mutated.next_id
+    q = jnp.asarray(tiny_corpus.queries[:32])
+    pol = policies.patience(24, delta=2, phi=90.0, k=10, tau=3)
+    a = search(mutated.index, q, pol, delta=mutated.delta_view())
+    b = search(ver.index, q, pol, delta=ver.delta)
+    np.testing.assert_array_equal(np.asarray(a.topk_ids),
+                                  np.asarray(b.topk_ids))
+    np.testing.assert_array_equal(np.asarray(a.probes),
+                                  np.asarray(b.probes))
+
+
+def test_registry_publish_monotonic(mutated):
+    reg = IndexRegistry(version_of(mutated, version=3))
+    assert reg.current().version == 3
+    reg.publish(version_of(mutated, version=1))     # stale: bumped
+    assert reg.current().version == 4
+    assert reg.swaps == 2

@@ -101,6 +101,61 @@ def test_embedding_bag_property(rows, f, seed):
                                rtol=1e-4, atol=1e-5)
 
 
+def _tiny_live_substrate(seed):
+    """Small corpus + index shared across hypothesis examples (module
+    cache keyed on nothing: the corpus is fixed, mutations vary)."""
+    global _LIVE_CACHE
+    try:
+        return _LIVE_CACHE
+    except NameError:
+        from repro.core import build_index
+        rng = np.random.default_rng(99)
+        docs = rng.normal(size=(600, 8)).astype(np.float32)
+        index = build_index(docs, 8, list_pad=128, n_iters=3, seed=0)
+        _LIVE_CACHE = (docs, index)
+        return _LIVE_CACHE
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.sampled_from(["add", "delete", "merge"]),
+                min_size=1, max_size=8),
+       st.integers(0, 2 ** 31 - 1))
+def test_live_mutations_preserve_rebuild_equivalence(script, seed):
+    """Any interleaving of add/delete/merge_delta keeps the live
+    overlay bit-identical to a fresh re-layout of the net corpus."""
+    from repro.core import policies, search
+    from repro.index import LiveIndex
+    docs, index = _tiny_live_substrate(seed)
+    rng = np.random.default_rng(seed)
+    live = LiveIndex(index, delta_cap=128)
+    for op in script:
+        if op == "add" and len(live.delta) < 100:
+            m = int(rng.integers(1, 9))
+            src = rng.integers(0, len(docs), m)
+            live.add(docs[src]
+                     + rng.normal(scale=0.1, size=(m, 8))
+                     .astype(np.float32))
+        elif op == "delete":
+            pool = [i for i in range(live.next_id)
+                    if i not in live.tombs]
+            if pool:
+                live.delete(rng.choice(pool,
+                                       min(4, len(pool)), replace=False))
+        elif op == "merge":
+            live.merge_delta()
+    queries = jnp.asarray(
+        rng.normal(size=(8, 8)).astype(np.float32))
+    pol = policies.patience(6, delta=2, phi=80.0, k=5, tau=3)
+    a = live.search(queries, pol)
+    b = search(live.rebuild_equivalent(), queries, pol)
+    np.testing.assert_array_equal(np.asarray(a.topk_ids),
+                                  np.asarray(b.topk_ids))
+    np.testing.assert_array_equal(np.asarray(a.probes),
+                                  np.asarray(b.probes))
+    # live doc count bookkeeping survives the interleaving
+    assert live.n_live == len(live.net_corpus()[1])
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 2 ** 31 - 1))
 def test_gbdt_predictions_bounded_by_leaves(seed):
