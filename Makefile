@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test test-fast bench bench-smoke
+.PHONY: test test-fast bench bench-smoke chaos-smoke
 
 test:
 	$(PY) -m pytest -q
@@ -21,3 +21,16 @@ bench-smoke:
 	  [json.load(open('artifacts/BENCH_' + n + '.json')) \
 	   for n in ('kernels', 'table2', 'serving')]; \
 	  print('bench artifacts OK')"
+
+# seeded chaos drills on a tiny substrate: crash + WAL recovery must be
+# bit-identical, and the resilience artifact must be non-empty
+chaos-smoke:
+	$(PY) -m repro.launch.serve --chaos --n-docs 4000 --queries 64 \
+	  --clusters 32 --dim 24 --n-probe 16 --k 10
+	$(PY) -c "import json; \
+	  d = json.load(open('artifacts/BENCH_resilience.json')); \
+	  assert d['recovery']['bit_identical'], 'recovery not bit-identical'; \
+	  assert d['recovery']['crashes'] > 0, 'no crashes injected'; \
+	  assert len(d['deadline_curve']) > 0, 'empty deadline curve'; \
+	  assert d['shard_faults']['attempts'] > 0, 'shard drill did not run'; \
+	  print('chaos artifact OK')"

@@ -27,9 +27,73 @@ import numpy as np
 Pytree = Any
 
 
+class CheckpointError(RuntimeError):
+    """A checkpoint on disk is missing, truncated, or corrupt.
+
+    Raised instead of raw ``KeyError``/``json``/``numpy`` tracebacks so
+    the message always carries the offending path and the expected
+    layout (``index.json`` + one ``arr_NNNNN.npy`` per leaf)."""
+
+
 def _leaf_paths(tree: Pytree) -> List[Tuple[str, Any]]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+
+
+def _read_index(path: str) -> Dict[str, Any]:
+    """Parse <ckpt dir>/index.json with actionable failure modes."""
+    idx_path = os.path.join(path, "index.json")
+    if not os.path.isdir(path):
+        raise CheckpointError(
+            f"checkpoint directory {path!r} does not exist — expected a "
+            f"published step dir (step_NNNNNNNN/) containing index.json "
+            f"plus one arr_NNNNN.npy per leaf")
+    if not os.path.exists(idx_path):
+        raise CheckpointError(
+            f"checkpoint {path!r} has no index.json — the directory is "
+            f"incomplete (torn write? partial copy?); expected "
+            f"index.json with keys 'step'/'keys'/'treedef' plus one "
+            f"arr_NNNNN.npy per leaf")
+    try:
+        with open(idx_path) as f:
+            index = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CheckpointError(
+            f"{idx_path!r} is truncated or corrupt ({e}); the snapshot "
+            f"cannot be trusted — restore an older step or delete this "
+            f"directory") from e
+    for key in ("step", "keys"):
+        if key not in index:
+            raise CheckpointError(
+                f"{idx_path!r} is missing required field {key!r} — "
+                f"expected schema {{'step': int, 'keys': [{{'key', "
+                f"'file', 'dtype', 'shape'}}...], 'treedef': str}}")
+    return index
+
+
+def _load_leaf(path: str, entry: Dict[str, Any]) -> np.ndarray:
+    fn = os.path.join(path, entry["file"])
+    try:
+        arr = np.load(fn, allow_pickle=False)
+    except FileNotFoundError as e:
+        raise CheckpointError(
+            f"checkpoint {path!r} is missing array file "
+            f"{entry['file']!r} for leaf {entry.get('key', '?')!r} "
+            f"(expected dtype={entry.get('dtype')}, "
+            f"shape={entry.get('shape')})") from e
+    except (ValueError, EOFError, OSError) as e:
+        raise CheckpointError(
+            f"array file {fn!r} for leaf {entry.get('key', '?')!r} is "
+            f"truncated or corrupt ({e}); expected "
+            f"dtype={entry.get('dtype')}, shape={entry.get('shape')} — "
+            f"restore an older step") from e
+    want = entry.get("shape")
+    if want is not None and list(arr.shape) != list(want):
+        raise CheckpointError(
+            f"array file {fn!r} for leaf {entry.get('key', '?')!r} has "
+            f"shape {list(arr.shape)} but index.json recorded {want} — "
+            f"the snapshot is internally inconsistent")
+    return arr
 
 
 class CheckpointManager:
@@ -122,10 +186,8 @@ class CheckpointManager:
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.root}")
         path = os.path.join(self.root, f"step_{step:08d}")
-        with open(os.path.join(path, "index.json")) as f:
-            index = json.load(f)
-        arrays = [np.load(os.path.join(path, e["file"]))
-                  for e in index["keys"]]
+        index = _read_index(path)
+        arrays = [_load_leaf(path, e) for e in index["keys"]]
         leaves, treedef = jax.tree_util.tree_flatten(template)
         if len(leaves) != len(arrays):
             raise ValueError(
@@ -150,10 +212,9 @@ class CheckpointManager:
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.root}")
         path = os.path.join(self.root, f"step_{step:08d}")
-        with open(os.path.join(path, "index.json")) as f:
-            index = json.load(f)
+        index = _read_index(path)
         out: Dict[str, np.ndarray] = {}
         for e in index["keys"]:
             key = e["key"].strip("[]'\"")
-            out[key] = np.load(os.path.join(path, e["file"]))
+            out[key] = _load_leaf(path, e)
         return step, out

@@ -109,6 +109,115 @@ class DistSearchResult(NamedTuple):
     probes: jnp.ndarray        # (B,) clusters scanned (global count)
 
 
+# -- fault-tolerant shard fan-out (host-coordinated data plane) -------------
+
+class ShardFault(RuntimeError):
+    """A shard probe failed or timed out (real or injected)."""
+
+
+@dataclasses.dataclass
+class ShardRetryReport:
+    attempts: int = 0                  # total shard dispatches issued
+    retries: int = 0                   # dispatches beyond the first try
+    skipped_shards: list = dataclasses.field(default_factory=list)
+    lost_clusters: int = 0             # clusters owned by skipped shards
+    backoff_ms: float = 0.0            # cumulative backoff slept
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_local", "list_pad"))
+def _shard_local_topk(centroids, docs, doc_ids, offsets, sizes, queries,
+                      *, k: int, n_local: int, list_pad: int):
+    """One shard's top-k over its ``n_local`` best local clusters."""
+    csims = queries @ centroids.T                       # (B, Cs)
+    n_rank = min(n_local, centroids.shape[0])
+    _, rank = jax.lax.top_k(csims, n_rank)
+    ts = jnp.full((queries.shape[0], k), -jnp.inf, jnp.float32)
+    ti = jnp.full((queries.shape[0], k), -1, jnp.int32)
+    for h in range(n_rank):
+        cids = rank[:, h]
+        offs = jnp.take(offsets, cids)
+        szs = jnp.take(sizes, cids)
+        tiles = jax.vmap(lambda o: jax.lax.dynamic_slice_in_dim(
+            docs, o, list_pad, 0))(offs)                # (B, L, d)
+        ids = jax.vmap(lambda o: jax.lax.dynamic_slice_in_dim(
+            doc_ids, o, list_pad, 0))(offs)
+        m = (jnp.arange(list_pad)[None, :] < szs[:, None]) & (ids >= 0)
+        sc = jnp.einsum("bld,bd->bl", tiles, queries)
+        sc = jnp.where(m, sc, -jnp.inf)
+        ids = jnp.where(m, ids, -1)
+        ts, ti = _merge_topk(ts, ti, sc, ids, k)
+    return ts, ti
+
+
+def search_with_retry(sharded: ShardedIVF, queries, *, k: int,
+                      n_probe: int, retry=None, fault=None, sleep=None
+                      ) -> Tuple[np.ndarray, np.ndarray,
+                                 ShardRetryReport]:
+    """Fan a query batch over IVF shards with per-shard retry + skip.
+
+    The real-data-plane promotion of the ``runtime.straggler``
+    simulation: each shard scans its top-``ceil(n_probe/S)`` local
+    clusters; a shard whose dispatch raises :class:`ShardFault` (or
+    ``TimeoutError``) is retried with the exponential backoff of
+    ``retry`` (a ``repro.runtime.straggler.RetryPolicy``) and, after
+    ``max_retries``, skipped — its clusters drop out of the candidate
+    set and the loss is recorded in the returned
+    :class:`ShardRetryReport` — so the wave *degrades* rather than
+    dies.
+
+    ``fault(shard, attempt)`` is the injection hook (chaos harness);
+    ``sleep(ms)`` is injectable so tests and simulations don't block.
+    """
+    import time as _time
+
+    from repro.runtime.straggler import RetryPolicy
+    retry = retry or RetryPolicy()
+    sleep = sleep if sleep is not None \
+        else (lambda ms: _time.sleep(ms / 1000.0))
+    q = jnp.asarray(queries, jnp.float32)
+    n_local = -(-n_probe // sharded.n_shards)
+    report = ShardRetryReport()
+    parts_s, parts_i = [], []
+    for s in range(sharded.n_shards):
+        got = None
+        for attempt in range(retry.max_retries + 1):
+            report.attempts += 1
+            if attempt > 0:
+                report.retries += 1
+                ms = retry.backoff_ms(attempt - 1)
+                report.backoff_ms += ms
+                sleep(ms)
+            try:
+                if fault is not None:
+                    fault(s, attempt)
+                got = _shard_local_topk(
+                    jnp.asarray(sharded.centroids[s], jnp.float32),
+                    jnp.asarray(sharded.docs[s], jnp.float32),
+                    jnp.asarray(sharded.doc_ids[s]),
+                    jnp.asarray(sharded.offsets[s]),
+                    jnp.asarray(sharded.sizes[s]), q, k=k,
+                    n_local=n_local, list_pad=sharded.list_pad)
+                break
+            except (ShardFault, TimeoutError):
+                continue
+        if got is None:
+            report.skipped_shards.append(s)
+            report.lost_clusters += int(
+                (np.asarray(sharded.sizes[s]) > 0).sum())
+            continue
+        parts_s.append(got[0])
+        parts_i.append(got[1])
+    if not parts_s:
+        b = q.shape[0]
+        return (np.full((b, k), -np.inf, np.float32),
+                np.full((b, k), -1, np.int32), report)
+    cat_s = jnp.concatenate(parts_s, axis=1)
+    cat_i = jnp.concatenate(parts_i, axis=1)
+    ts, idx = jax.lax.top_k(cat_s, k)
+    ti = jnp.take_along_axis(cat_i, idx, axis=1)
+    return np.asarray(ts), np.asarray(ti), report
+
+
 def make_distributed_search(mesh, *, n_probe: int, k: int,
                             patience_delta: Optional[int] = None,
                             patience_phi: float = 95.0,

@@ -13,8 +13,10 @@ gather/scatters on device; the host loop only moves query ids.
 from __future__ import annotations
 
 import dataclasses
+import time
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
+
 import functools
-from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +25,8 @@ import numpy as np
 from repro.core.ivf import (DeltaView, IVFIndex, _merge_topk, _probe_tiles,
                             _scrub_dead, intersection_pct,
                             validate_alignment)
+from repro.core.policies import (RUNG_CAP, RUNG_FORCE, RUNG_NONE,
+                                 RUNG_TIGHTEN, DegradationLadder)
 
 
 class LaneState(NamedTuple):
@@ -76,14 +80,21 @@ def _admit(state: LaneState, centroids: jnp.ndarray, new_q: jnp.ndarray,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("chunk", "k", "n_probe", "delta",
-                                    "use_fused"))
+                   static_argnames=("chunk", "k", "n_probe", "use_fused"))
 def _advance(index: IVFIndex, state: LaneState,
              dview: Optional[DeltaView] = None,
-             dead: Optional[jnp.ndarray] = None, *, chunk: int, k: int,
-             n_probe: int, delta: int, phi: float,
+             dead: Optional[jnp.ndarray] = None, *,
+             lane_delta: jnp.ndarray, lane_cap: jnp.ndarray, chunk: int,
+             k: int, n_probe: int, phi: float,
              use_fused: bool = True) -> LaneState:
     """Advance every active lane by up to ``chunk`` probes.
+
+    ``lane_delta``/``lane_cap`` are per-lane (W,) exit knobs: the
+    patience threshold and the probe budget.  Without a deadline both
+    are constant (the scheduler's ``delta``/``n_probe``); under
+    deadline pressure the degradation ladder lowers them per lane, so
+    a struggling lane exits earlier while its neighbours run the full
+    policy.  Exit granularity stays per-probe either way.
 
     The fused path issues ONE ``ivf_scan_merge`` dispatch for the whole
     chunk — lanes stop materializing ``(W, list_pad, d)`` doc gathers,
@@ -127,7 +138,7 @@ def _advance(index: IVFIndex, state: LaneState,
         ctr = jnp.where(st.active & (st.h >= 1) & (phi_v >= phi),
                         st.patience + 1, 0)
         h = jnp.where(st.active, st.h + 1, st.h)
-        exited = st.active & ((ctr >= delta) | (h >= n_probe))
+        exited = st.active & ((ctr >= lane_delta) | (h >= lane_cap))
         return LaneState(st.qvec, st.cluster_rank, h, ts, ti, ctr,
                          st.active & ~exited, st.qid)
 
@@ -183,6 +194,11 @@ def _advance(index: IVFIndex, state: LaneState,
     return jax.lax.fori_loop(0, chunk, body, state)
 
 
+#: ordering of degradation reasons — a stronger rung overwrites a weaker
+_REASON_RANK = {"tightened_patience": 1, "capped_probes": 2,
+                "forced_exit": 3, "shed": 4}
+
+
 @dataclasses.dataclass
 class ServeReport:
     results: Dict[int, np.ndarray]
@@ -190,6 +206,18 @@ class ServeReport:
     waves: int
     occupancy: float            # mean fraction of busy lanes per wave
     lane_steps: int             # total lane-probe slots spent
+    # -- deadline/degradation accounting (empty when deadline_ms unset) --
+    degraded: Dict[int, str] = dataclasses.field(default_factory=dict)
+    latency_ms: Dict[int, float] = dataclasses.field(default_factory=dict)
+    deadline_ms: Optional[float] = None
+    wave_cost_ms: float = 0.0   # final EMA of per-wave cost
+
+    @property
+    def degraded_fraction(self) -> float:
+        return len(self.degraded) / max(len(self.results), 1)
+
+    def shed_ids(self) -> List[int]:
+        return [q for q, r in self.degraded.items() if r == "shed"]
 
 
 class WaveScheduler:
@@ -209,7 +237,21 @@ class WaveScheduler:
     def __init__(self, index: IVFIndex, *, wave_size: int = 64,
                  chunk: int = 8, k: int = 100, n_probe: int = 80,
                  delta: int = 7, phi: float = 95.0,
-                 use_fused: bool = True, registry=None):
+                 use_fused: bool = True, registry=None,
+                 deadline_ms: Optional[float] = None,
+                 ladder: Optional[DegradationLadder] = None,
+                 clock: Optional[Callable[[], float]] = None):
+        """``deadline_ms``: per-query latency budget, counted from lane
+        admission.  When set, the scheduler walks the
+        :class:`repro.core.policies.DegradationLadder` instead of
+        blowing the budget: tighten patience -> cap remaining probes ->
+        force-exit with the partial top-k -> shed admissions.  Every
+        affected query carries a reason in ``ServeReport.degraded``.
+
+        ``clock``: ms-resolution monotonic clock (injectable for
+        deterministic tests and the chaos harness); defaults to
+        ``time.monotonic() * 1000``.
+        """
         if use_fused:
             validate_alignment(index)
         self.index = index
@@ -221,12 +263,21 @@ class WaveScheduler:
         self.phi = phi
         self.use_fused = use_fused
         self.registry = registry
+        self.deadline_ms = deadline_ms
+        self.ladder = ladder or DegradationLadder()
+        self._now = clock or (lambda: time.monotonic() * 1000.0)
 
     def _version(self):
         if self.registry is None:
             return self.index, None, None
         ver = self.registry.current()
         return ver.index, ver.delta, ver.dead
+
+    @staticmethod
+    def _flag(degraded: Dict[int, str], qid: int, reason: str) -> None:
+        old = degraded.get(qid)
+        if old is None or _REASON_RANK[reason] > _REASON_RANK[old]:
+            degraded[qid] = reason
 
     def serve(self, queries: np.ndarray, *, compact: bool = True,
               on_wave=None) -> ServeReport:
@@ -235,31 +286,92 @@ class WaveScheduler:
         next_q = 0
         results: Dict[int, np.ndarray] = {}
         probes: Dict[int, int] = {}
-        finished_h: Dict[int, int] = {}
+        degraded: Dict[int, str] = {}
+        latency: Dict[int, float] = {}
         waves = 0
         occ = []
         lane_steps = 0
         nq = queries.shape[0]
         prev_active = np.zeros(self.w, bool)
         prev_state = state
+        lane_admit = np.zeros(self.w, np.float64)   # admit timestamp, ms
+        full_delta = jnp.full((self.w,), self.delta, jnp.int32)
+        full_cap = jnp.full((self.w,), self.n, jnp.int32)
+        wave_cost = 0.0                              # EMA of wave ms
         while True:
             active = np.asarray(state.active)
             qids = np.asarray(state.qid)
+            now = self._now()
             # harvest exits: lanes that flipped active->inactive
             for lane in np.nonzero(prev_active & ~active)[0]:
                 qid = int(np.asarray(prev_state.qid)[lane])
                 results[qid] = np.asarray(state.topk_ids)[lane]
                 probes[qid] = int(np.asarray(state.h)[lane])
+                latency[qid] = now - lane_admit[lane]
+            # -- degradation ladder (deadline-budgeted serving) -------------
+            lane_delta, lane_cap = full_delta, full_cap
+            if self.deadline_ms is not None:
+                remaining = self.deadline_ms - (now - lane_admit)
+                rungs = self.ladder.rungs(remaining, max(wave_cost, 1e-9))
+                rungs = np.where(active, rungs, RUNG_NONE)
+                force = active & (rungs == RUNG_FORCE)
+                if force.any():
+                    h_np = np.asarray(state.h)
+                    tid = np.asarray(state.topk_ids)
+                    for lane in np.nonzero(force)[0]:
+                        qid = int(qids[lane])
+                        results[qid] = tid[lane]
+                        probes[qid] = int(h_np[lane])
+                        latency[qid] = now - lane_admit[lane]
+                        self._flag(degraded, qid, "forced_exit")
+                    active = active & ~force
+                    state = state._replace(active=jnp.asarray(active))
+                for lane in np.nonzero(active
+                                       & (rungs >= RUNG_TIGHTEN))[0]:
+                    self._flag(degraded, int(qids[lane]),
+                               "capped_probes" if rungs[lane] >= RUNG_CAP
+                               else "tightened_patience")
+                if (rungs > RUNG_NONE).any():
+                    h_np = np.asarray(state.h)
+                    afford = np.floor(
+                        np.maximum(remaining, 0.0)
+                        / max(wave_cost, 1e-9)).astype(np.int64) \
+                        * self.chunk
+                    cap_np = np.where(rungs >= RUNG_CAP, h_np + afford,
+                                      self.n)
+                    cap_np = np.minimum(cap_np, self.n).astype(np.int32)
+                    tight = min(self.ladder.tight_delta, self.delta)
+                    delta_np = np.where(rungs >= RUNG_TIGHTEN, tight,
+                                        self.delta).astype(np.int32)
+                    lane_delta = jnp.asarray(delta_np)
+                    lane_cap = jnp.asarray(cap_np)
+            # -- admission (with overload shedding) -------------------------
             if compact or not active.any():
                 if next_q < nq and (~active).any():
                     room = int((~active).sum())
-                    batch = queries[next_q: next_q + room]
-                    ids = np.arange(next_q, next_q + batch.shape[0],
-                                    dtype=np.int32)
-                    state = _admit(state, self.index.centroids,
-                                   jnp.asarray(batch), jnp.asarray(ids),
-                                   self.n)
-                    next_q += batch.shape[0]
+                    if self.deadline_ms is not None \
+                            and wave_cost > self.deadline_ms:
+                        # even a fresh query cannot meet the deadline:
+                        # shed instead of admitting to certain death
+                        for qid in range(next_q,
+                                         min(nq, next_q + room)):
+                            results[qid] = np.full(self.k, -1, np.int32)
+                            probes[qid] = 0
+                            latency[qid] = 0.0
+                            self._flag(degraded, qid, "shed")
+                        next_q = min(nq, next_q + room)
+                    else:
+                        batch = queries[next_q: next_q + room]
+                        ids = np.arange(next_q,
+                                        next_q + batch.shape[0],
+                                        dtype=np.int32)
+                        before = active
+                        state = _admit(state, self.index.centroids,
+                                       jnp.asarray(batch),
+                                       jnp.asarray(ids), self.n)
+                        next_q += batch.shape[0]
+                        newly = np.asarray(state.active) & ~before
+                        lane_admit[newly] = now
             active = np.asarray(state.active)
             if not active.any() and next_q >= nq:
                 break
@@ -268,12 +380,19 @@ class WaveScheduler:
             prev_active = active
             prev_state = state
             index, dview, dead = self._version()
-            state = _advance(index, state, dview, dead, chunk=self.chunk,
-                             k=self.k, n_probe=self.n, delta=self.delta,
+            state = _advance(index, state, dview, dead,
+                             lane_delta=lane_delta, lane_cap=lane_cap,
+                             chunk=self.chunk, k=self.k, n_probe=self.n,
                              phi=self.phi, use_fused=self.use_fused)
             waves += 1
             if on_wave is not None:
                 on_wave(waves)
+            sample = self._now() - now
+            wave_cost = sample if waves == 1 \
+                else 0.5 * wave_cost + 0.5 * sample
         return ServeReport(results, probes, waves,
                            float(np.mean(occ)) if occ else 0.0,
-                           lane_steps)
+                           lane_steps, degraded=degraded,
+                           latency_ms=latency,
+                           deadline_ms=self.deadline_ms,
+                           wave_cost_ms=wave_cost)

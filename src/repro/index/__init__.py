@@ -1,6 +1,9 @@
-"""Live index mutation: delta buffer, tombstones, versioned snapshots."""
+"""Live index mutation: delta buffer, tombstones, versioned snapshots,
+and the crash-safety pair (mutation WAL + snapshot recovery)."""
 from repro.core.ivf import DeltaView
 from repro.index.delta import (DeltaBuffer, DeltaFull, Tombstones,
                                assign_clusters)
 from repro.index.live import LiveIndex, relayout
 from repro.index.registry import IndexRegistry, IndexVersion, version_of
+from repro.index.wal import (MutationWAL, ReplayReport, WALCorruptError,
+                             WALRecord)

@@ -58,13 +58,16 @@ class DeltaBuffer:
     def occupancy(self) -> float:
         return self.count / self.capacity
 
-    def add(self, vecs: np.ndarray, ids: np.ndarray,
-            assign: np.ndarray) -> None:
-        m = vecs.shape[0]
+    def ensure_room(self, m: int) -> None:
         if self.count + m > self.capacity:
             raise DeltaFull(
                 f"delta buffer full ({self.count}/{self.capacity} slots "
                 f"used, {m} more requested): call merge_delta() first")
+
+    def add(self, vecs: np.ndarray, ids: np.ndarray,
+            assign: np.ndarray) -> None:
+        m = vecs.shape[0]
+        self.ensure_room(m)
         sl = slice(self.count, self.count + m)
         self.vecs[sl] = vecs
         self.ids[sl] = ids

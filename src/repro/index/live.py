@@ -33,6 +33,7 @@ from repro.core.ivf import (DeltaView, IVFIndex, search as core_search,
                             validate_alignment)
 from repro.index.delta import (DeltaBuffer, DeltaFull, Tombstones,
                                assign_clusters)
+from repro.index.wal import OP_ADD, OP_DELETE, OP_MERGE
 
 
 def relayout(vecs: np.ndarray, ids: np.ndarray, assign: np.ndarray,
@@ -88,10 +89,19 @@ def relayout(vecs: np.ndarray, ids: np.ndarray, assign: np.ndarray,
 
 
 class LiveIndex:
-    """Mutable front over an immutable IVFIndex + delta + tombstones."""
+    """Mutable front over an immutable IVFIndex + delta + tombstones.
+
+    ``wal`` (optional :class:`repro.index.wal.MutationWAL`): every
+    mutation appends one fsync'd record *before* touching in-memory
+    state (classic write-ahead ordering; arguments are validated first
+    so a logged record can always be replayed).  Combined with
+    ``IndexRegistry`` snapshots this makes the index crash-safe:
+    ``IndexRegistry.recover(manager, wal)`` rebuilds a bit-identical
+    LiveIndex from the latest snapshot plus log replay.
+    """
 
     def __init__(self, index: IVFIndex, *, delta_cap: int = 1024,
-                 align: int = 64, round_total_to: int = 4096):
+                 align: int = 64, round_total_to: int = 4096, wal=None):
         validate_alignment(index, blk_l=align)
         self.index = index
         self.align = align
@@ -103,6 +113,50 @@ class LiveIndex:
         self.tombs = Tombstones(self.next_id)
         self.version = 0                 # bumped by merge_delta
         self.seq = 0                     # bumped by every mutation
+        self.wal = wal
+        self._replaying = False
+
+    @classmethod
+    def from_version(cls, ver, *, align: int = 64,
+                     round_total_to: int = 4096, wal=None) -> "LiveIndex":
+        """Rebuild a LiveIndex from a published/restored snapshot
+        (``repro.index.registry.IndexVersion``).  The delta buffer and
+        tombstone set are reconstructed slot-for-slot, so replaying the
+        same mutations yields the same state as the original instance."""
+        self = cls.__new__(cls)
+        self.index = ver.index
+        self.align = align
+        self.round_total_to = round_total_to
+        self._centroids = np.asarray(ver.index.centroids)
+        self._refresh_mirrors()
+        self.next_id = int(ver.next_id)
+        dvecs = np.asarray(ver.delta.vecs)
+        dids = np.asarray(ver.delta.ids)
+        dassign = np.asarray(ver.delta.assign)
+        buf = DeltaBuffer(dvecs.shape[1], dvecs.shape[0])
+        buf.vecs[: dvecs.shape[0]] = dvecs
+        buf.ids[: dids.shape[0]] = dids
+        buf.assign[: dassign.shape[0]] = dassign
+        # assign >= 0 marks every consumed slot (delete burns only the
+        # id; compact_keep resets assign) -> append pointer position
+        buf.count = int((dassign >= 0).sum())
+        buf._slot_of = {int(i): s for s, i in enumerate(dids) if i >= 0}
+        self.delta = buf
+        dead = np.asarray(ver.dead)
+        tombs = Tombstones(dead.shape[0])
+        tombs._dead[: dead.shape[0]] = dead
+        tombs.count = int(dead.sum())
+        self.tombs = tombs
+        self.version = int(getattr(ver, "merges", 0))
+        self.seq = int(ver.seq) if getattr(ver, "seq", -1) >= 0 \
+            else int(ver.version)
+        self.wal = wal
+        self._replaying = False
+        return self
+
+    def _log(self, op: int, payload: Optional[np.ndarray] = None) -> None:
+        if self.wal is not None and not self._replaying:
+            self.wal.append(op, self.seq + 1, payload)
 
     # -- host mirrors -------------------------------------------------------
     def _refresh_mirrors(self) -> None:
@@ -128,6 +182,8 @@ class LiveIndex:
         Raises :class:`DeltaFull` when the buffer is out of slots."""
         vecs = np.asarray(vecs, np.float32).reshape(-1, self.index.dim)
         m = vecs.shape[0]
+        self.delta.ensure_room(m)        # validate BEFORE logging
+        self._log(OP_ADD, vecs)
         ids = np.arange(self.next_id, self.next_id + m, dtype=np.int32)
         assign = assign_clusters(vecs, self._centroids)
         self.delta.add(vecs, ids, assign)
@@ -139,11 +195,13 @@ class LiveIndex:
     def delete(self, ids) -> None:
         """Tombstone documents by external id (idempotent)."""
         ids = np.atleast_1d(np.asarray(ids, np.int64))
+        bad = ids[(ids < 0) | (ids >= self.next_id)]
+        if bad.size:                     # validate BEFORE logging
+            raise ValueError(f"doc id {int(bad[0])} was never allocated")
+        self._log(OP_DELETE, ids)
         burn_rows = []
         for i in ids:
             i = int(i)
-            if i < 0 or i >= self.next_id:
-                raise ValueError(f"doc id {i} was never allocated")
             if i in self.tombs:
                 continue
             self.tombs.add((i,))
@@ -168,6 +226,7 @@ class LiveIndex:
         ``list_pad`` spill back into the buffer (newest first out).
         Returns the new version number.
         """
+        self._log(OP_MERGE)
         lp = self.index.list_pad
         rows = np.nonzero(self._doc_ids >= 0)[0]
         assign_main = self._main_assignments(rows)

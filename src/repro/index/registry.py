@@ -7,8 +7,10 @@ version between waves — never mid-wave — so every in-flight probe loop
 sees one coherent (index, delta, tombstones) triple.
 
 Snapshots round-trip through ``checkpoint.CheckpointManager`` (atomic
-dir-rename publish, one .npy per array), so a serving process can be
-restarted from the last published version without replaying mutations.
+dir-rename publish, one .npy per array).  With a mutation WAL
+(``repro.index.wal``) the pair is crash-safe: ``recover()`` loads the
+latest snapshot and replays every logged mutation past it, rebuilding
+a LiveIndex bit-identical to the one that crashed.
 """
 from __future__ import annotations
 
@@ -19,7 +21,11 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.manager import CheckpointError
 from repro.core.ivf import DeltaView, IVFIndex
+
+_SNAPSHOT_KEYS = ("centroids", "docs", "doc_ids", "offsets", "sizes",
+                  "dvecs", "dids", "dassign", "dead", "meta")
 
 
 @dataclass(frozen=True)
@@ -30,6 +36,8 @@ class IndexVersion:
     delta: DeltaView
     dead: jnp.ndarray          # (id_capacity,) bool tombstone lookup
     next_id: int
+    seq: int = -1              # LiveIndex mutation counter at snapshot
+    merges: int = 0            # LiveIndex merge counter at snapshot
 
 
 def version_of(live, *, version: Optional[int] = None) -> IndexVersion:
@@ -39,7 +47,9 @@ def version_of(live, *, version: Optional[int] = None) -> IndexVersion:
         index=live.index,
         delta=live.delta_view(),
         dead=live.dead_lookup(),
-        next_id=live.next_id)
+        next_id=live.next_id,
+        seq=live.seq,
+        merges=live.version)
 
 
 class IndexRegistry:
@@ -57,7 +67,8 @@ class IndexRegistry:
             if self._current is not None and \
                     ver.version <= self._current.version:
                 ver = IndexVersion(self._current.version + 1, ver.index,
-                                   ver.delta, ver.dead, ver.next_id)
+                                   ver.delta, ver.dead, ver.next_id,
+                                   ver.seq, ver.merges)
             self._current = ver
             self.swaps += 1
             return ver
@@ -80,7 +91,8 @@ class IndexRegistry:
             "dvecs": ver.delta.vecs, "dids": ver.delta.ids,
             "dassign": ver.delta.assign, "dead": ver.dead,
             "meta": np.asarray(
-                [ix.list_pad, ver.version, ver.next_id], np.int64),
+                [ix.list_pad, ver.version, ver.next_id, ver.seq,
+                 ver.merges], np.int64),
         }
         return manager.save(ver.version, tree)
 
@@ -88,7 +100,23 @@ class IndexRegistry:
     def restore(manager, step: Optional[int] = None
                 ) -> Tuple["IndexRegistry", IndexVersion]:
         step, arrs = manager.load_arrays(step)
-        list_pad, version, next_id = (int(x) for x in arrs["meta"])
+        missing = [k for k in _SNAPSHOT_KEYS if k not in arrs]
+        if missing:
+            raise CheckpointError(
+                f"index snapshot at step {step} under {manager.root!r} "
+                f"is missing arrays {missing} — expected the schema "
+                f"written by IndexRegistry.save: {list(_SNAPSHOT_KEYS)} "
+                f"(was this checkpoint written by a different tree?)")
+        meta = np.asarray(arrs["meta"]).ravel()
+        if meta.size < 3:
+            raise CheckpointError(
+                f"index snapshot at step {step} under {manager.root!r} "
+                f"has a malformed 'meta' array of size {meta.size} — "
+                f"expected >= 3 entries [list_pad, version, next_id"
+                f"(, seq, merges)]")
+        list_pad, version, next_id = (int(x) for x in meta[:3])
+        seq = int(meta[3]) if meta.size > 3 else version
+        merges = int(meta[4]) if meta.size > 4 else 0
         ver = IndexVersion(
             version=version,
             index=IVFIndex(jnp.asarray(arrs["centroids"]),
@@ -100,5 +128,27 @@ class IndexRegistry:
                             jnp.asarray(arrs["dids"]),
                             jnp.asarray(arrs["dassign"])),
             dead=jnp.asarray(arrs["dead"]),
-            next_id=next_id)
+            next_id=next_id,
+            seq=seq,
+            merges=merges)
         return IndexRegistry(ver), ver
+
+    @staticmethod
+    def recover(manager, wal=None, *, step: Optional[int] = None,
+                align: int = 64, round_total_to: int = 4096):
+        """Crash recovery: latest snapshot + WAL replay past it.
+
+        Returns ``(registry, live, replay_report)`` where ``live`` is a
+        :class:`repro.index.live.LiveIndex` bit-identical (top-k ids,
+        φ history, probe counts) to the instance that crashed, and the
+        registry holds its freshly published current version.
+        ``replay_report`` is None when no WAL is given.
+        """
+        from repro.index.live import LiveIndex
+        _, ver = IndexRegistry.restore(manager, step)
+        live = LiveIndex.from_version(ver, align=align,
+                                      round_total_to=round_total_to,
+                                      wal=wal)
+        report = wal.replay_into(live) if wal is not None else None
+        reg = IndexRegistry(version_of(live))
+        return reg, live, report

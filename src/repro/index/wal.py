@@ -1,0 +1,226 @@
+"""Mutation write-ahead log: crash-safe durability for the live index.
+
+Every ``LiveIndex`` mutation (``add``/``delete``/``merge_delta``)
+appends one fsync'd record *before* the in-memory state changes, so a
+process killed at any mutation boundary can be rebuilt exactly:
+
+    snapshot (IndexRegistry.save)  +  replay of records with
+    seq > snapshot.seq             ==  the uncrashed LiveIndex
+
+Replay is bit-identical — external ids are allocated sequentially from
+the restored ``next_id``, cluster assignment is deterministic, and
+``merge_delta`` is a pure function of (index, delta) state — so the
+recovered index serves the same top-k ids, probe counts and φ history
+as the run that never crashed (tests/test_wal_recovery.py).
+
+On-disk format (little-endian, append-only):
+
+    file magic  ``EEWAL001`` (8 bytes)
+    record      ``\\xa5Z`` | op u8 | seq u64 | payload_len u32 | crc32 u32
+                | payload (``np.save`` bytes: f32 (m,d) vecs for add,
+                  i64 ids for delete, empty for merge)
+
+A crash mid-append leaves a truncated final record: replay drops the
+torn tail and reports it.  A bad magic/CRC *before* the tail means real
+corruption and raises :class:`WALCorruptError` with the file offset.
+"""
+from __future__ import annotations
+
+import io
+import os
+import struct
+import zlib
+from dataclasses import dataclass
+from typing import List, Optional
+
+import numpy as np
+
+FILE_MAGIC = b"EEWAL001"
+_REC_MAGIC = b"\xa5Z"
+_HDR = struct.Struct("<2sBQII")          # magic, op, seq, len, crc
+
+OP_ADD, OP_DELETE, OP_MERGE = 1, 2, 3
+_OP_NAMES = {OP_ADD: "add", OP_DELETE: "delete", OP_MERGE: "merge"}
+
+
+class WALCorruptError(RuntimeError):
+    """The log is damaged beyond the tolerated torn tail."""
+
+
+@dataclass(frozen=True)
+class WALRecord:
+    seq: int
+    op: int
+    payload: Optional[np.ndarray]        # None for merge
+
+    @property
+    def op_name(self) -> str:
+        return _OP_NAMES[self.op]
+
+
+@dataclass
+class ReplayReport:
+    applied: int = 0
+    skipped: int = 0
+    torn_tail: bool = False
+    last_seq: int = 0
+
+
+def _encode_payload(arr: Optional[np.ndarray]) -> bytes:
+    if arr is None:
+        return b""
+    buf = io.BytesIO()
+    np.save(buf, np.ascontiguousarray(arr), allow_pickle=False)
+    return buf.getvalue()
+
+
+def _decode_payload(raw: bytes) -> Optional[np.ndarray]:
+    if not raw:
+        return None
+    return np.load(io.BytesIO(raw), allow_pickle=False)
+
+
+class MutationWAL:
+    """Append-only fsync'd mutation log (one writer, many readers)."""
+
+    def __init__(self, path: str, *, fsync: bool = True):
+        self.path = path
+        self.fsync = fsync
+        self.last_scan_torn = False
+        size = os.path.getsize(path) if os.path.exists(path) else -1
+        if 0 < size < len(FILE_MAGIC):
+            # crash during creation: no record can fit, safe to reset
+            os.truncate(path, 0)
+            size = 0
+        self._f = open(path, "ab")
+        if size <= 0:
+            self._f.write(FILE_MAGIC)
+            self._sync()
+        else:
+            with open(path, "rb") as f:
+                if f.read(len(FILE_MAGIC)) != FILE_MAGIC:
+                    raise WALCorruptError(
+                        f"{path}: bad file magic — not a mutation WAL "
+                        f"(expected {FILE_MAGIC!r}); refusing to append")
+
+    # -- write ---------------------------------------------------------------
+    def _sync(self) -> None:
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+
+    def append(self, op: int, seq: int,
+               payload: Optional[np.ndarray] = None) -> None:
+        if op not in _OP_NAMES:
+            raise ValueError(f"unknown WAL op {op}")
+        raw = _encode_payload(payload)
+        hdr = _HDR.pack(_REC_MAGIC, op, seq, len(raw), zlib.crc32(raw))
+        self._f.write(hdr + raw)         # single write: tail is one record
+        self._sync()
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+    def __enter__(self) -> "MutationWAL":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- read ----------------------------------------------------------------
+    def scan(self) -> List[WALRecord]:
+        """All complete records, oldest first.
+
+        Tolerates a truncated final record (crash mid-append) — sets
+        ``last_scan_torn`` — but raises :class:`WALCorruptError` on a
+        damaged record that is *followed* by more data.
+        """
+        self._f.flush()
+        out: List[WALRecord] = []
+        self.last_scan_torn = False
+        size = os.path.getsize(self.path)
+        with open(self.path, "rb") as f:
+            if f.read(len(FILE_MAGIC)) != FILE_MAGIC:
+                raise WALCorruptError(
+                    f"{self.path}: bad file magic — expected "
+                    f"{FILE_MAGIC!r} (file written by MutationWAL)")
+            while True:
+                off = f.tell()
+                hdr = f.read(_HDR.size)
+                if not hdr:
+                    break
+                if len(hdr) < _HDR.size:
+                    self.last_scan_torn = True
+                    break
+                magic, op, seq, plen, crc = _HDR.unpack(hdr)
+                if magic != _REC_MAGIC or op not in _OP_NAMES:
+                    raise WALCorruptError(
+                        f"{self.path}: bad record header at byte {off} "
+                        f"(magic={magic!r} op={op}); the log is corrupt "
+                        f"before its tail — restore from an older "
+                        f"snapshot or truncate the file at that offset")
+                raw = f.read(plen)
+                if len(raw) < plen:
+                    self.last_scan_torn = True
+                    break
+                if zlib.crc32(raw) != crc:
+                    if off + _HDR.size + plen >= size:
+                        self.last_scan_torn = True   # torn tail payload
+                        break
+                    raise WALCorruptError(
+                        f"{self.path}: CRC mismatch in record at byte "
+                        f"{off} (seq={seq}, op={_OP_NAMES[op]}) with "
+                        f"valid data after it — the log is corrupt")
+                out.append(WALRecord(seq, op, _decode_payload(raw)))
+        return out
+
+    # -- replay --------------------------------------------------------------
+    def replay_into(self, live) -> ReplayReport:
+        """Re-apply every record newer than ``live.seq`` (the snapshot
+        sequence number) onto a restored LiveIndex, in order."""
+        rep = ReplayReport()
+        records = self.scan()
+        rep.torn_tail = self.last_scan_torn
+        live._replaying = True
+        try:
+            for rec in records:
+                if rec.seq <= live.seq:
+                    rep.skipped += 1
+                    continue
+                if rec.seq != live.seq + 1:
+                    raise WALCorruptError(
+                        f"{self.path}: sequence gap — record seq="
+                        f"{rec.seq} but index is at seq={live.seq}; a "
+                        f"record is missing (log truncated mid-stream?)")
+                if rec.op == OP_ADD:
+                    live.add(rec.payload)
+                elif rec.op == OP_DELETE:
+                    live.delete(rec.payload)
+                else:
+                    live.merge_delta()
+                rep.applied += 1
+        finally:
+            live._replaying = False
+        rep.last_seq = live.seq
+        return rep
+
+    # -- maintenance ---------------------------------------------------------
+    def truncate_upto(self, seq: int) -> int:
+        """Drop records with ``seq <=`` the given snapshot sequence
+        (log compaction after a successful snapshot).  Returns the
+        number of records kept.  Atomic: rewrite + rename."""
+        keep = [r for r in self.scan() if r.seq > seq]
+        tmp = self.path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(FILE_MAGIC)
+            for r in keep:
+                raw = _encode_payload(r.payload)
+                f.write(_HDR.pack(_REC_MAGIC, r.op, r.seq, len(raw),
+                                  zlib.crc32(raw)) + raw)
+            f.flush()
+            os.fsync(f.fileno())
+        self._f.close()
+        os.replace(tmp, self.path)
+        self._f = open(self.path, "ab")
+        return len(keep)

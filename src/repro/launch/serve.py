@@ -12,10 +12,24 @@ document adds per wave (plus R//4 deletes of previously added docs)
 into a fresh immutable index version every M waves.  The driver then
 reports live-vs-static recall so regressions in the overlay path are
 visible at the CLI.
+
+Chaos mode (``repro.runtime.chaos``): ``--chaos`` runs the seeded
+resilience drills — crash + WAL recovery over a mutation stream,
+recall-vs-deadline curve under latency spikes, and shard-fault
+retry/skip — and writes ``artifacts/BENCH_resilience.json``:
+
+    PYTHONPATH=src python -m repro.launch.serve --chaos \
+        --n-docs 4000 --queries 64 --clusters 32
+
+``--deadline-ms`` (without ``--chaos``) serves the stream under a real
+per-query latency budget through the degradation ladder.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import tempfile
 import time
 
 import jax.numpy as jnp
@@ -59,6 +73,24 @@ def main() -> None:
                          "version every N waves")
     ap.add_argument("--delta-cap", type=int, default=4096,
                     help="delta buffer capacity (slots)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-query latency budget; under pressure the "
+                         "scheduler walks the degradation ladder "
+                         "instead of blowing it")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the seeded resilience drills and write "
+                         "artifacts/BENCH_resilience.json")
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--chaos-crash-every", type=int, default=7,
+                    help="inject a crash at every Nth mutation "
+                         "boundary (0 = off)")
+    ap.add_argument("--chaos-shard-fault-rate", type=float, default=0.3)
+    ap.add_argument("--chaos-spike-rate", type=float, default=0.15)
+    ap.add_argument("--chaos-deadlines", default="2,5,10,25",
+                    help="comma-separated deadline_ms sweep")
+    ap.add_argument("--chaos-out", default=None,
+                    help="output JSON path (default "
+                         "artifacts/BENCH_resilience.json)")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -73,6 +105,30 @@ def main() -> None:
                            args.k)
     exact = np.asarray(exact)
 
+    if args.chaos:
+        from repro.runtime.chaos import ChaosConfig, run_chaos
+        cfg = ChaosConfig(seed=args.chaos_seed,
+                          crash_every=args.chaos_crash_every,
+                          shard_fault_rate=args.chaos_shard_fault_rate,
+                          spike_rate=args.chaos_spike_rate)
+        deadlines = [float(x) for x in
+                     args.chaos_deadlines.split(",") if x]
+        with tempfile.TemporaryDirectory(prefix="chaos_") as workdir:
+            payload = run_chaos(index, c.docs, c.queries, exact, cfg,
+                                workdir, k=args.k,
+                                n_probe=args.n_probe,
+                                deadlines_ms=deadlines)
+        out = args.chaos_out or os.path.join("artifacts",
+                                             "BENCH_resilience.json")
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(json.dumps({"recovery": payload["recovery"],
+                          "shard_faults": payload["shard_faults"]},
+                         indent=2))
+        print(f"wrote {out}")
+        return
+
     if args.policy == "fixed":
         pol = policies.fixed(args.n_probe, k=args.k)
         res = search(index, jnp.asarray(c.queries), pol)
@@ -82,12 +138,15 @@ def main() -> None:
 
     ws = WaveScheduler(index, wave_size=args.wave_size, chunk=4,
                        k=args.k, n_probe=args.n_probe, delta=args.delta,
-                       phi=args.phi)
+                       phi=args.phi, deadline_ms=args.deadline_ms)
     rep, ids, probes, wall = _serve(ws, c.queries,
                                     compact=not args.no_compact)
     summ = metrics.summarize(ids, probes, exact, c.relevant, wall)
     summ["occupancy"] = round(rep.occupancy, 3)
     summ["waves"] = rep.waves
+    if args.deadline_ms is not None:
+        summ["degraded_fraction"] = round(rep.degraded_fraction, 4)
+        summ["wave_cost_ms"] = round(rep.wave_cost_ms, 3)
     print({k: round(v, 4) if isinstance(v, float) else v
            for k, v in summ.items()})
 

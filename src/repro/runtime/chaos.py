@@ -1,0 +1,308 @@
+"""Chaos harness: deterministic seeded fault injection over a live
+serving stack, measuring how gracefully it degrades.
+
+Three drills, one JSON report (``artifacts/BENCH_resilience.json`` via
+``python -m repro.launch.serve --chaos``):
+
+* **Crash / recovery** — a seeded mutation stream (adds, deletes,
+  merges) runs against a WAL-backed :class:`repro.index.LiveIndex`
+  with periodic snapshots; :class:`SimulatedFailure` is injected at
+  mutation boundaries, the process state is abandoned, and
+  ``IndexRegistry.recover`` rebuilds it from snapshot + log replay.
+  Reported: crash count, recovery wall time, replayed records, and a
+  ``bit_identical`` bool (recovered results vs an uncrashed oracle,
+  per-probe AND fused kernel paths).
+* **Deadline sweep** — the query set is served under several
+  ``deadline_ms`` budgets while a simulated clock injects latency
+  spikes; the degradation ladder (tighten -> cap -> force -> shed) is
+  the actuator.  Reported: recall-vs-deadline curve with degraded
+  fractions and max budget overshoot.
+* **Shard faults** — ``search_with_retry`` fan-out with seeded shard
+  failures; retries/backoff/skips and residual recall are reported.
+
+Everything is driven by one seed, so a chaos run is reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.fault import SimulatedFailure
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    seed: int = 0
+    # crash/recovery drill
+    mutation_steps: int = 24       # mutation-boundary steps in the stream
+    adds_per_step: int = 8
+    crash_every: int = 7           # crash at every Nth boundary (0 = off)
+    snapshot_every: int = 5        # registry.save cadence (boundaries)
+    # deadline drill
+    base_wave_ms: float = 1.0
+    spike_rate: float = 0.15       # P(wave hits a latency spike)
+    spike_ms: float = 8.0
+    # shard drill
+    n_shards: int = 4
+    shard_fault_rate: float = 0.3  # P(one dispatch raises ShardFault)
+
+
+class SimClock:
+    """Deterministic ms clock, advanced explicitly by the harness."""
+
+    def __init__(self, start_ms: float = 0.0):
+        self.ms = float(start_ms)
+
+    def __call__(self) -> float:
+        return self.ms
+
+    def advance(self, ms: float) -> None:
+        self.ms += ms
+
+
+class ChaosMonkey:
+    """Seeded event source shared by the drills."""
+
+    def __init__(self, cfg: ChaosConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.clock = SimClock()
+        self.spikes = 0
+        self.shard_faults = 0
+
+    def wave_ms(self) -> float:
+        ms = self.cfg.base_wave_ms
+        if self.rng.random() < self.cfg.spike_rate:
+            self.spikes += 1
+            ms += self.cfg.spike_ms
+        return ms
+
+    def tick_wave(self, wave: int) -> None:
+        """on_wave hook: advance simulated time by one wave's cost."""
+        self.clock.advance(self.wave_ms())
+
+    def shard_fault(self, shard: int, attempt: int) -> None:
+        """fault hook for ``search_with_retry``."""
+        from repro.core.distributed_ivf import ShardFault
+        if self.rng.random() < self.cfg.shard_fault_rate:
+            self.shard_faults += 1
+            raise ShardFault(
+                f"chaos: shard {shard} fault (attempt {attempt})")
+
+
+# ---------------------------------------------------------------------------
+# drill 1: crash + WAL recovery over a live mutation stream
+# ---------------------------------------------------------------------------
+
+def _mutation_stream(cfg: ChaosConfig, docs: np.ndarray):
+    """Deterministic (op, payload) list: adds of noisy corpus copies,
+    deletes of previously added ids, periodic merges."""
+    rng = np.random.default_rng(cfg.seed + 1)
+    ops = []
+    for step in range(cfg.mutation_steps):
+        src = rng.integers(0, docs.shape[0], cfg.adds_per_step)
+        noise = rng.normal(scale=0.05,
+                           size=(cfg.adds_per_step, docs.shape[1]))
+        ops.append(("add", (docs[src] + noise).astype(np.float32)))
+        if step % 3 == 2:
+            ops.append(("delete_recent", int(cfg.adds_per_step // 2)))
+        if step % 6 == 5:
+            ops.append(("merge", None))
+    return ops
+
+
+def _apply(live, op, payload, added: List[int]):
+    from repro.index import DeltaFull
+    if op == "add":
+        try:
+            added.extend(int(i) for i in live.add(payload))
+        except DeltaFull:
+            live.merge_delta()
+            added.extend(int(i) for i in live.add(payload))
+    elif op == "delete_recent":
+        if len(added) >= payload:
+            doomed = [added.pop() for _ in range(payload)]
+            live.delete(doomed)
+    else:
+        live.merge_delta()
+
+
+def run_crash_recovery(index, docs: np.ndarray, queries: np.ndarray,
+                       cfg: ChaosConfig, workdir: str, *, k: int = 10,
+                       n_probe: int = 16) -> Dict:
+    """Kill-and-replay drill.  Returns recovery metrics including the
+    bit-identity verdict against an uncrashed oracle."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.core import policies, search
+    from repro.index import (IndexRegistry, LiveIndex, MutationWAL,
+                             version_of)
+
+    wal = MutationWAL(os.path.join(workdir, "mutations.wal"))
+    live = LiveIndex(index, delta_cap=4096, wal=wal)
+    oracle = LiveIndex(index, delta_cap=4096)
+    mgr = CheckpointManager(os.path.join(workdir, "snapshots"),
+                            async_save=False, keep=2)
+    reg = IndexRegistry(version_of(live))
+    reg.save(mgr)                      # base snapshot (seq 0)
+
+    crashes = 0
+    recovery_ms: List[float] = []
+    replayed = 0
+    added_live: List[int] = []
+    added_oracle: List[int] = []
+    ops = _mutation_stream(cfg, docs)
+    for step, (op, payload) in enumerate(ops):
+        _apply(live, op, payload, added_live)
+        _apply(oracle, op, payload, added_oracle)
+        if cfg.crash_every and (step + 1) % cfg.crash_every == 0:
+            crashes += 1
+            try:
+                raise SimulatedFailure(f"chaos crash @ boundary {step}")
+            except SimulatedFailure:
+                pass                   # process "dies" here
+            t0 = time.monotonic()
+            _, live, rep = IndexRegistry.recover(mgr, wal)
+            recovery_ms.append((time.monotonic() - t0) * 1000.0)
+            replayed += rep.applied
+        if cfg.snapshot_every and (step + 1) % cfg.snapshot_every == 0:
+            reg = IndexRegistry(version_of(live))
+            reg.save(mgr)
+            wal.truncate_upto(live.seq)
+
+    # bit-identity: recovered-and-continued live vs uncrashed oracle,
+    # on both kernel paths
+    q = jnp.asarray(queries)
+    identical = True
+    for kw in ({}, {"use_fused_kernel": True, "chunk": 4}):
+        pol = policies.patience(n_probe, delta=2, phi=90.0, k=k, tau=3)
+        a = live.search(q, pol, **kw)
+        b = oracle.search(q, pol, **kw)
+        identical &= bool(
+            np.array_equal(np.asarray(a.topk_ids),
+                           np.asarray(b.topk_ids))
+            and np.array_equal(np.asarray(a.probes),
+                               np.asarray(b.probes))
+            and np.allclose(np.asarray(a.phi_hist),
+                            np.asarray(b.phi_hist), atol=1e-4))
+    wal.close()
+    return {
+        "crashes": crashes,
+        "mutations": len(ops),
+        "replayed_records": replayed,
+        "mean_recovery_ms": float(np.mean(recovery_ms))
+        if recovery_ms else 0.0,
+        "max_recovery_ms": float(np.max(recovery_ms))
+        if recovery_ms else 0.0,
+        "final_seq": live.seq,
+        "bit_identical": identical,
+    }
+
+
+# ---------------------------------------------------------------------------
+# drill 2: recall-vs-deadline curve under latency spikes
+# ---------------------------------------------------------------------------
+
+def run_deadline_sweep(index, queries: np.ndarray,
+                       exact_ids: np.ndarray, cfg: ChaosConfig,
+                       deadlines_ms: List[float], *, k: int = 10,
+                       n_probe: int = 16, delta: int = 3,
+                       phi: float = 90.0, wave_size: int = 32,
+                       chunk: int = 1) -> List[Dict]:
+    from repro.core import metrics
+    from repro.core.serving import WaveScheduler
+
+    curve = []
+    for dl in list(deadlines_ms) + [None]:     # None = no deadline row
+        monkey = ChaosMonkey(cfg)              # fresh RNG per point
+        ws = WaveScheduler(index, wave_size=wave_size, chunk=chunk,
+                           k=k, n_probe=n_probe, delta=delta, phi=phi,
+                           deadline_ms=dl, clock=monkey.clock)
+        rep = ws.serve(queries, on_wave=monkey.tick_wave)
+        nq = queries.shape[0]
+        ids = np.stack([rep.results[i] for i in range(nq)])
+        over = [rep.latency_ms[i] - dl for i in range(nq)
+                if dl is not None and rep.latency_ms[i] > dl]
+        reasons: Dict[str, int] = {}
+        for r in rep.degraded.values():
+            reasons[r] = reasons.get(r, 0) + 1
+        curve.append({
+            "deadline_ms": dl,
+            "recall": round(metrics.r_star_at_k(ids, exact_ids), 4),
+            "degraded_fraction": round(rep.degraded_fraction, 4),
+            "reasons": reasons,
+            "max_overshoot_ms": round(max(over, default=0.0), 3),
+            "wave_cost_ms": round(rep.wave_cost_ms, 3),
+            "waves": rep.waves,
+            "spikes": monkey.spikes,
+        })
+    return curve
+
+
+# ---------------------------------------------------------------------------
+# drill 3: shard faults through the retry/backoff data plane
+# ---------------------------------------------------------------------------
+
+def run_shard_drill(index, queries: np.ndarray, exact_ids: np.ndarray,
+                    cfg: ChaosConfig, *, k: int = 10,
+                    n_probe: int = 16) -> Dict:
+    from repro.core import metrics
+    from repro.core.distributed_ivf import search_with_retry, shard_index
+    from repro.runtime.straggler import RetryPolicy
+
+    monkey = ChaosMonkey(cfg)
+    sh = shard_index(index, cfg.n_shards)
+    sleep_log = {"ms": 0.0}
+
+    def sim_sleep(ms: float) -> None:
+        sleep_log["ms"] += ms
+        monkey.clock.advance(ms)
+
+    _, ids_clean, _ = search_with_retry(
+        sh, queries, k=k, n_probe=n_probe, sleep=sim_sleep)
+    _, ids_chaos, rep = search_with_retry(
+        sh, queries, k=k, n_probe=n_probe,
+        retry=RetryPolicy(max_retries=3, base_ms=1.0),
+        fault=monkey.shard_fault, sleep=sim_sleep)
+    return {
+        "n_shards": cfg.n_shards,
+        "fault_rate": cfg.shard_fault_rate,
+        "injected_faults": monkey.shard_faults,
+        "attempts": rep.attempts,
+        "retries": rep.retries,
+        "skipped_shards": rep.skipped_shards,
+        "lost_clusters": rep.lost_clusters,
+        "backoff_ms": round(rep.backoff_ms, 3),
+        "recall_clean": round(
+            metrics.r_star_at_k(np.asarray(ids_clean), exact_ids), 4),
+        "recall_chaos": round(
+            metrics.r_star_at_k(np.asarray(ids_chaos), exact_ids), 4),
+    }
+
+
+# ---------------------------------------------------------------------------
+
+def run_chaos(index, docs: np.ndarray, queries: np.ndarray,
+              exact_ids: np.ndarray, cfg: ChaosConfig, workdir: str, *,
+              k: int = 10, n_probe: int = 16,
+              deadlines_ms: Optional[List[float]] = None) -> Dict:
+    """All three drills; the returned dict is the
+    ``BENCH_resilience.json`` payload."""
+    deadlines_ms = deadlines_ms or [2.0, 5.0, 10.0, 25.0]
+    t0 = time.monotonic()
+    out = {
+        "config": dataclasses.asdict(cfg),
+        "recovery": run_crash_recovery(index, docs, queries, cfg,
+                                       workdir, k=k, n_probe=n_probe),
+        "deadline_curve": run_deadline_sweep(index, queries, exact_ids,
+                                             cfg, deadlines_ms, k=k,
+                                             n_probe=n_probe),
+        "shard_faults": run_shard_drill(index, queries, exact_ids, cfg,
+                                        k=k, n_probe=n_probe),
+    }
+    out["wall_s"] = round(time.monotonic() - t0, 1)
+    return out

@@ -3,8 +3,11 @@
 A serving *wave* fans a query batch over shards; a shard missing the
 deadline gets its slice *re-dispatched* to the fastest shard of the next
 wave (speculative retry), bounding p99 by ~2 wave times rather than the
-slowest shard. This module simulates the control plane (the data plane
-is `repro.core.serving`); the policy is what we test.
+slowest shard.  ``run_waves`` simulates that control-plane policy; the
+:class:`RetryPolicy` backoff schedule defined here is shared with the
+*real* data plane (``repro.core.distributed_ivf.search_with_retry``),
+where a faulting shard probe is retried with exponential backoff and
+finally skipped so the wave degrades instead of dying.
 """
 from __future__ import annotations
 
@@ -14,11 +17,33 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Exponential backoff schedule for shard probe retries."""
+    max_retries: int = 3         # attempts = max_retries + 1
+    base_ms: float = 1.0
+    multiplier: float = 2.0
+    max_ms: float = 1000.0
+
+    def __post_init__(self):
+        if self.max_retries < 0 or self.base_ms < 0 \
+                or self.multiplier < 1.0:
+            raise ValueError(
+                f"invalid RetryPolicy(max_retries={self.max_retries}, "
+                f"base_ms={self.base_ms}, multiplier={self.multiplier})")
+
+    def backoff_ms(self, attempt: int) -> float:
+        """Backoff before retry ``attempt`` (0-based first retry)."""
+        return min(self.base_ms * self.multiplier ** attempt,
+                   self.max_ms)
+
+
 @dataclass
 class WaveStats:
     waves: int = 0
     redispatches: int = 0
     completed: int = 0
+    pending: int = 0             # queries still unserved at max_waves
     p50_ms: float = 0.0
     p99_ms: float = 0.0
 
@@ -54,6 +79,9 @@ def run_waves(n_queries: int, n_shards: int,
         stats.waves += 1
     lats = np.array(list(done_at.values()))
     stats.completed = len(done_at)
+    # queries still pending when max_waves ran out would otherwise
+    # silently vanish from the completion stats — surface them
+    stats.pending = len(pending)
     if len(lats):
         stats.p50_ms = float(np.percentile(lats, 50))
         stats.p99_ms = float(np.percentile(lats, 99))

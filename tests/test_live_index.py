@@ -186,3 +186,73 @@ def test_registry_publish_monotonic(mutated):
     reg.publish(version_of(mutated, version=1))     # stale: bumped
     assert reg.current().version == 4
     assert reg.swaps == 2
+
+
+# -- tombstone edge cases ---------------------------------------------------
+
+def test_delete_id_only_in_delta_buffer(tiny_index, tiny_corpus):
+    """Deleting a doc that was never merged (lives only in the buffer)
+    must drop it from search and from the net corpus."""
+    live = LiveIndex(tiny_index, delta_cap=128)
+    added = live.add(tiny_corpus.docs[:8]
+                     + np.float32(0.01))            # near-duplicates
+    target = int(added[3])
+    live.delete(target)
+    assert target in live.tombs
+    vecs, ids = live.net_corpus()
+    assert target not in ids
+    q = jnp.asarray(tiny_corpus.queries[:32])
+    pol = policies.fixed(tiny_index.n_clusters, k=10, tau=3)
+    res = live.search(q, pol)
+    assert not np.isin(np.asarray(res.topk_ids), target).any()
+    oracle = search(live.rebuild_equivalent(), q, pol)
+    np.testing.assert_array_equal(np.asarray(res.topk_ids),
+                                  np.asarray(oracle.topk_ids))
+
+
+def test_double_delete_is_idempotent(tiny_index, tiny_corpus):
+    """Deleting the same id twice (buffered or main) is a no-op the
+    second time — counts don't double, search is unchanged."""
+    live = LiveIndex(tiny_index, delta_cap=128)
+    added = live.add(tiny_corpus.docs[:4] + np.float32(0.01))
+    main_id = int(np.asarray(tiny_index.doc_ids).max()) // 2
+    for victim in (int(added[0]), main_id):
+        live.delete(victim)
+        n_live = live.n_live
+        dead = live.tombs.count
+        live.delete(victim)                         # again
+        assert live.n_live == n_live
+        assert live.tombs.count == dead
+    live.delete([main_id, main_id])                 # dup within one call
+    assert live.tombs.count == 2
+    q = jnp.asarray(tiny_corpus.queries[:16])
+    pol = policies.patience(16, delta=2, phi=90.0, k=10, tau=3)
+    res = live.search(q, pol)
+    oracle = search(live.rebuild_equivalent(), q, pol)
+    np.testing.assert_array_equal(np.asarray(res.topk_ids),
+                                  np.asarray(oracle.topk_ids))
+
+
+def test_delete_then_readd_across_merge_boundary(tiny_index, tiny_corpus):
+    """Delete a doc, merge, then add the same vector back: the old id
+    stays dead, the re-add gets a fresh id, and the overlay still
+    matches a rebuild."""
+    live = LiveIndex(tiny_index, delta_cap=128)
+    vec = tiny_corpus.docs[100:101] + np.float32(0.01)
+    (old_id,) = (int(i) for i in live.add(vec))
+    live.delete(old_id)
+    live.merge_delta()                              # boundary
+    assert old_id in live.tombs
+    (new_id,) = (int(i) for i in live.add(vec))
+    assert new_id > old_id                          # ids never recycled
+    assert new_id not in live.tombs
+    vecs, ids = live.net_corpus()
+    assert old_id not in ids and new_id in ids
+    q = jnp.asarray(tiny_corpus.queries[:32])
+    for kw in ({}, {"use_fused_kernel": True, "chunk": 4}):
+        pol = policies.patience(16, delta=2, phi=90.0, k=10, tau=3)
+        res = live.search(q, pol, **kw)
+        oracle = search(live.rebuild_equivalent(), q, pol, **kw)
+        np.testing.assert_array_equal(np.asarray(res.topk_ids),
+                                      np.asarray(oracle.topk_ids))
+    assert not np.isin(np.asarray(res.topk_ids), old_id).any()

@@ -101,3 +101,24 @@ def test_straggler_redispatch_bounds_p99():
     assert with_rd.completed == 2000
     assert with_rd.redispatches > 0
     assert with_rd.p99_ms < 500.0      # straggler latency never surfaces
+
+
+def test_straggler_pending_surfaced_at_max_waves():
+    """Queries still unserved when max_waves runs out must show up in
+    WaveStats.pending instead of silently vanishing."""
+    def never(rng, shard):
+        return 1e9                          # every shard always misses
+
+    st = run_waves(64, 4, never, deadline_ms=50, wave_size=8, seed=0,
+                   max_waves=5)
+    assert st.completed == 0
+    assert st.pending == 64                 # nothing lost, all surfaced
+    assert st.waves == 5
+
+    def sometimes(rng, shard):
+        return 1e9 if shard == 0 else 10.0
+
+    st2 = run_waves(64, 4, sometimes, deadline_ms=50, wave_size=4,
+                    seed=0, max_waves=2)
+    assert st2.completed + st2.pending == 64
+    assert st2.pending > 0

@@ -1,0 +1,229 @@
+"""Deadline-budgeted degradation ladder, shard retry/backoff, and the
+seeded chaos harness."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import brute_force, metrics, policies
+from repro.core.distributed_ivf import (ShardFault, search_with_retry,
+                                        shard_index)
+from repro.core.policies import (DEGRADE_REASONS, RUNG_CAP, RUNG_FORCE,
+                                 RUNG_NONE, RUNG_TIGHTEN,
+                                 DegradationLadder)
+from repro.core.serving import WaveScheduler
+from repro.runtime.chaos import ChaosConfig, ChaosMonkey, SimClock
+from repro.runtime.straggler import RetryPolicy
+
+
+# -- degradation ladder -----------------------------------------------------
+
+def test_ladder_rungs_vectorized():
+    lad = DegradationLadder(tighten_at=3.0, cap_at=1.5, force_at=0.0)
+    remaining = np.array([10.0, 4.0, 2.9, 1.4, 0.0, -1.0])
+    rungs = lad.rungs(remaining, wave_cost_ms=1.0)
+    np.testing.assert_array_equal(
+        rungs, [RUNG_NONE, RUNG_NONE, RUNG_TIGHTEN, RUNG_CAP,
+                RUNG_FORCE, RUNG_FORCE])
+
+
+def test_ladder_scales_with_wave_cost():
+    lad = DegradationLadder()
+    # 5 ms left is comfortable when waves cost 1 ms, dire at 4 ms
+    assert lad.rungs(np.array([5.0]), 1.0)[0] == RUNG_NONE
+    assert lad.rungs(np.array([5.0]), 4.0)[0] >= RUNG_TIGHTEN
+
+
+def test_ladder_validates_ordering():
+    with pytest.raises(ValueError):
+        DegradationLadder(tighten_at=1.0, cap_at=2.0)
+
+
+def test_degrade_reason_vocabulary():
+    assert set(DEGRADE_REASONS) == {"tightened_patience", "capped_probes",
+                                    "forced_exit", "shed"}
+
+
+# -- deadline-budgeted serving ----------------------------------------------
+
+@pytest.fixture(scope="module")
+def served(tiny_index, tiny_corpus):
+    """Serve the stream under a tight deadline with a deterministic
+    simulated clock (2 ms per wave)."""
+    clock = SimClock()
+    ws = WaveScheduler(tiny_index, wave_size=16, chunk=1, k=10,
+                       n_probe=16, delta=3, phi=90.0, deadline_ms=5.0,
+                       clock=clock)
+    queries = tiny_corpus.queries[:64]
+    rep = ws.serve(queries, on_wave=lambda w: clock.advance(2.0))
+    return rep, queries
+
+
+def test_deadline_every_query_served(served):
+    rep, queries = served
+    assert set(rep.results) == set(range(queries.shape[0]))
+    assert rep.deadline_ms == 5.0
+
+
+def test_deadline_overshoot_bounded_by_one_wave(served):
+    """No query may exceed its budget by more than one probe's worth of
+    work (chunk=1 => one wave)."""
+    rep, _ = served
+    wave_ms = 2.0
+    for qid, lat in rep.latency_ms.items():
+        assert lat <= rep.deadline_ms + wave_ms + 1e-9, \
+            f"query {qid} overshot: {lat:.2f}ms vs {rep.deadline_ms}ms"
+
+
+def test_deadline_degraded_queries_have_reasons(served):
+    rep, _ = served
+    assert rep.degraded, "tight deadline must degrade some queries"
+    for qid, reason in rep.degraded.items():
+        assert reason in DEGRADE_REASONS
+        assert qid in rep.results
+    # anything that ran past the budget must carry a reason
+    for qid, lat in rep.latency_ms.items():
+        if lat > rep.deadline_ms:
+            assert qid in rep.degraded
+    assert 0.0 < rep.degraded_fraction <= 1.0
+
+
+def test_no_deadline_no_degradation(tiny_index, tiny_corpus):
+    ws = WaveScheduler(tiny_index, wave_size=16, chunk=4, k=10,
+                       n_probe=16, delta=3, phi=90.0)
+    rep = ws.serve(tiny_corpus.queries[:32])
+    assert rep.degraded == {}
+    assert rep.deadline_ms is None
+    assert rep.degraded_fraction == 0.0
+
+
+def test_deadline_sheds_admissions_when_hopeless(tiny_index, tiny_corpus):
+    """Once a wave costs more than the whole budget, new admissions are
+    shed with empty results rather than queued to certain failure."""
+    clock = SimClock()
+    ws = WaveScheduler(tiny_index, wave_size=4, chunk=1, k=10,
+                       n_probe=16, delta=3, phi=90.0, deadline_ms=1.0,
+                       clock=clock)
+    rep = ws.serve(tiny_corpus.queries[:32],
+                   on_wave=lambda w: clock.advance(4.0))
+    shed = rep.shed_ids()
+    assert shed, "4 ms waves under a 1 ms budget must shed"
+    for qid in shed:
+        assert rep.degraded[qid] == "shed"
+        assert np.all(rep.results[qid] == -1)
+        assert rep.probes[qid] == 0
+    # shed queries still appear exactly once in the report
+    assert set(rep.results) == set(range(32))
+
+
+def test_deadline_recall_monotone(tiny_index, tiny_corpus):
+    """Looser budgets must not hurt recall (chunk=1, fixed wave cost)."""
+    queries = tiny_corpus.queries[:64]
+    _, exact = brute_force(jnp.asarray(tiny_corpus.docs),
+                           jnp.asarray(queries), 10)
+    exact = np.asarray(exact)
+    recalls = []
+    for dl in (2.0, 8.0, None):
+        clock = SimClock()
+        ws = WaveScheduler(tiny_index, wave_size=16, chunk=1, k=10,
+                           n_probe=16, delta=3, phi=90.0,
+                           deadline_ms=dl, clock=clock)
+        rep = ws.serve(queries, on_wave=lambda w: clock.advance(1.0))
+        ids = np.stack([rep.results[i] for i in range(64)])
+        recalls.append(metrics.r_star_at_k(ids, exact))
+    assert recalls[0] <= recalls[1] + 1e-9 <= recalls[2] + 2e-9
+
+
+# -- shard retry with backoff -----------------------------------------------
+
+def test_retry_policy_backoff_schedule():
+    rp = RetryPolicy(max_retries=5, base_ms=1.0, multiplier=2.0,
+                     max_ms=6.0)
+    assert [rp.backoff_ms(a) for a in range(4)] == [1.0, 2.0, 4.0, 6.0]
+    with pytest.raises(ValueError):
+        RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError):
+        RetryPolicy(multiplier=0.5)
+
+
+def test_shard_retry_flaky_recovers(tiny_index, tiny_corpus):
+    """A shard that fails twice then succeeds must yield results
+    identical to the clean run, with the retries accounted for."""
+    queries = tiny_corpus.queries[:16]
+    sh = shard_index(tiny_index, 4)
+    _, ids_clean, rep_clean = search_with_retry(sh, queries, k=10,
+                                                n_probe=16)
+    assert rep_clean.retries == 0 and not rep_clean.skipped_shards
+
+    fails = {"left": 2}
+
+    def flaky(shard, attempt):
+        if shard == 1 and fails["left"] > 0:
+            fails["left"] -= 1
+            raise ShardFault("flaky shard 1")
+
+    slept = []
+    _, ids, rep = search_with_retry(
+        sh, queries, k=10, n_probe=16,
+        retry=RetryPolicy(max_retries=3, base_ms=1.0, multiplier=2.0),
+        fault=flaky, sleep=slept.append)
+    np.testing.assert_array_equal(np.asarray(ids),
+                                  np.asarray(ids_clean))
+    assert rep.retries == 2
+    assert not rep.skipped_shards
+    assert slept == [1.0, 2.0]          # exponential backoff observed
+
+
+def test_shard_retry_dead_shard_skipped(tiny_index, tiny_corpus):
+    """A shard that never recovers is skipped after max_retries and its
+    clusters recorded as lost; the query still gets an answer."""
+    queries = tiny_corpus.queries[:16]
+    sh = shard_index(tiny_index, 4)
+
+    def dead(shard, attempt):
+        if shard == 0:
+            raise ShardFault("shard 0 is gone")
+
+    _, ids, rep = search_with_retry(
+        sh, queries, k=10, n_probe=16,
+        retry=RetryPolicy(max_retries=2, base_ms=0.5),
+        fault=dead, sleep=lambda ms: None)
+    assert rep.skipped_shards == [0]
+    assert rep.lost_clusters > 0
+    assert rep.retries == 2
+    ids = np.asarray(ids)
+    assert ids.shape == (16, 10)
+    assert (ids >= 0).all(), "surviving shards must still fill top-k"
+
+
+# -- chaos harness ----------------------------------------------------------
+
+def test_chaos_monkey_deterministic():
+    a, b = ChaosMonkey(ChaosConfig(seed=3)), ChaosMonkey(ChaosConfig(seed=3))
+    assert [a.wave_ms() for _ in range(20)] == \
+           [b.wave_ms() for _ in range(20)]
+
+
+def test_chaos_end_to_end(tiny_index, tiny_corpus, tmp_path):
+    from repro.runtime.chaos import run_chaos
+
+    queries = tiny_corpus.queries[:32]
+    _, exact = brute_force(jnp.asarray(tiny_corpus.docs),
+                           jnp.asarray(queries), 10)
+    cfg = ChaosConfig(seed=1, mutation_steps=8, adds_per_step=6,
+                      crash_every=3, snapshot_every=4,
+                      shard_fault_rate=0.4)
+    payload = run_chaos(tiny_index, tiny_corpus.docs, queries,
+                        np.asarray(exact), cfg, str(tmp_path),
+                        k=10, n_probe=16, deadlines_ms=[2.0, 10.0])
+    rec = payload["recovery"]
+    assert rec["crashes"] > 0
+    assert rec["replayed_records"] > 0
+    assert rec["bit_identical"] is True
+    curve = payload["deadline_curve"]
+    assert len(curve) == 3               # 2 deadlines + unconstrained row
+    assert curve[-1]["deadline_ms"] is None
+    assert curve[-1]["degraded_fraction"] == 0.0
+    for row in curve:
+        assert 0.0 <= row["recall"] <= 1.0
+    assert payload["shard_faults"]["attempts"] >= cfg.n_shards

@@ -1,0 +1,238 @@
+"""Crash safety: mutation WAL + snapshot recovery.
+
+The core contract: a LiveIndex recovered from (latest snapshot + WAL
+replay) after a crash injected at ANY mutation boundary serves
+bit-identical results — top-k ids, probe counts, φ history — to the
+instance that never crashed, on both the per-probe and fused kernel
+paths.
+"""
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointError, CheckpointManager
+from repro.core import policies
+from repro.index import (IndexRegistry, LiveIndex, MutationWAL,
+                         WALCorruptError, version_of)
+from repro.index.wal import OP_ADD, OP_DELETE
+from repro.runtime.fault import SimulatedFailure
+
+
+def _script(corpus, n_adds=5):
+    """Deterministic mutation script: (op, payload) tuples."""
+    rng = np.random.default_rng(42)
+    ops = []
+    for j in range(n_adds):
+        vecs = (corpus.docs[rng.integers(0, 2000, 6)]
+                + rng.normal(scale=0.03, size=(6, corpus.docs.shape[1]))
+                ).astype(np.float32)
+        ops.append(("add", vecs))
+        if j == 1:
+            ops.append(("delete_main", rng.integers(0, 2000, 4)))
+        if j == 2:
+            ops.append(("merge", None))
+        if j == 3:
+            ops.append(("delete_added", 2))   # delete 2 recent adds
+    return ops
+
+
+def _apply(live, op, payload, added):
+    if op == "add":
+        added.extend(int(i) for i in live.add(payload))
+    elif op == "delete_main":
+        live.delete(payload)
+    elif op == "delete_added":
+        doomed = added[-payload:]
+        live.delete(doomed)
+        del added[-payload:]
+    else:
+        live.merge_delta()
+
+
+def _results(live, queries, **kw):
+    pol = policies.patience(16, delta=2, phi=90.0, k=10, tau=3)
+    r = live.search(jnp.asarray(queries), pol, **kw)
+    return (np.asarray(r.topk_ids), np.asarray(r.probes),
+            np.asarray(r.phi_hist))
+
+
+@pytest.fixture(scope="module")
+def small(tiny_corpus):
+    from repro.core import build_index
+
+    class C:
+        docs = tiny_corpus.docs[:2000]
+        queries = tiny_corpus.queries[:32]
+    C.index = build_index(C.docs, 16, list_pad=256, n_iters=3, seed=0)
+    return C
+
+
+def test_kill_and_replay_every_boundary(small, tmp_path):
+    """Inject a SimulatedFailure at every mutation boundary; recovery
+    must be bit-identical to the uncrashed run on both kernel paths."""
+    ops = _script(small)
+    # uncrashed oracle
+    oracle = LiveIndex(small.index, delta_cap=256)
+    added_o = []
+    for op, payload in ops:
+        _apply(oracle, op, payload, added_o)
+    want_pp = _results(oracle, small.queries)
+    want_f = _results(oracle, small.queries, use_fused_kernel=True,
+                      chunk=4)
+
+    for crash_at in range(len(ops) + 1):
+        workdir = tmp_path / f"boundary_{crash_at}"
+        workdir.mkdir()
+        wal = MutationWAL(str(workdir / "wal.log"))
+        live = LiveIndex(small.index, delta_cap=256, wal=wal)
+        mgr = CheckpointManager(str(workdir / "snaps"), async_save=False)
+        IndexRegistry(version_of(live)).save(mgr)     # base snapshot
+        added = []
+        for op, payload in ops[:crash_at]:
+            _apply(live, op, payload, added)
+        with pytest.raises(SimulatedFailure):
+            raise SimulatedFailure(f"kill @ boundary {crash_at}")
+        del live                                      # process died
+        _, recovered, rep = IndexRegistry.recover(mgr, wal)
+        assert rep.applied == crash_at                # full replay
+        for op, payload in ops[crash_at:]:
+            _apply(recovered, op, payload, added)
+        assert recovered.seq == oracle.seq
+        assert recovered.next_id == oracle.next_id
+        got_pp = _results(recovered, small.queries)
+        got_f = _results(recovered, small.queries,
+                         use_fused_kernel=True, chunk=4)
+        for got, want in ((got_pp, want_pp), (got_f, want_f)):
+            np.testing.assert_array_equal(got[0], want[0])
+            np.testing.assert_array_equal(got[1], want[1])
+            np.testing.assert_allclose(got[2], want[2], atol=1e-4)
+        wal.close()
+
+
+def test_recovery_from_mid_stream_snapshot(small, tmp_path):
+    """Snapshot part-way + WAL truncation: replay resumes past it."""
+    ops = _script(small)
+    wal = MutationWAL(str(tmp_path / "wal.log"))
+    live = LiveIndex(small.index, delta_cap=256, wal=wal)
+    mgr = CheckpointManager(str(tmp_path / "snaps"), async_save=False)
+    IndexRegistry(version_of(live)).save(mgr)
+    added = []
+    for op, payload in ops[:4]:
+        _apply(live, op, payload, added)
+    IndexRegistry(version_of(live)).save(mgr)
+    kept = wal.truncate_upto(live.seq)
+    assert kept == 0                          # snapshot covers the log
+    for op, payload in ops[4:]:
+        _apply(live, op, payload, added)
+    _, recovered, rep = IndexRegistry.recover(mgr, wal)
+    assert rep.applied == len(ops) - 4
+    assert rep.skipped == 0
+    np.testing.assert_array_equal(_results(recovered, small.queries)[0],
+                                  _results(live, small.queries)[0])
+    wal.close()
+
+
+def test_torn_tail_is_tolerated(small, tmp_path):
+    """A crash mid-append truncates the final record; replay drops it
+    and reports torn_tail instead of dying."""
+    path = str(tmp_path / "wal.log")
+    wal = MutationWAL(path)
+    live = LiveIndex(small.index, delta_cap=256, wal=wal)
+    mgr = CheckpointManager(str(tmp_path / "snaps"), async_save=False)
+    IndexRegistry(version_of(live)).save(mgr)
+    live.add(small.docs[:4])
+    live.add(small.docs[4:8])
+    wal.close()
+    with open(path, "rb") as f:
+        full = f.read()
+    with open(path, "wb") as f:               # tear the last record
+        f.write(full[:-7])
+    wal2 = MutationWAL(path)
+    _, recovered, rep = IndexRegistry.recover(mgr, wal2)
+    assert rep.torn_tail
+    assert rep.applied == 1                   # only the intact record
+    assert recovered.seq == 1
+    wal2.close()
+
+
+def test_mid_file_corruption_raises(small, tmp_path):
+    path = str(tmp_path / "wal.log")
+    wal = MutationWAL(path)
+    live = LiveIndex(small.index, delta_cap=256, wal=wal)
+    live.add(small.docs[:4])
+    live.add(small.docs[4:8])
+    wal.close()
+    with open(path, "r+b") as f:              # flip payload bytes of
+        f.seek(30)                            # the FIRST record
+        f.write(b"\xff\xff\xff")
+    wal2 = MutationWAL(path)
+    with pytest.raises(WALCorruptError, match="(CRC|corrupt)"):
+        wal2.scan()
+    wal2.close()
+
+
+def test_sequence_gap_raises(small, tmp_path):
+    path = str(tmp_path / "wal.log")
+    wal = MutationWAL(path)
+    wal.append(OP_ADD, 1, small.docs[:2])
+    wal.append(OP_DELETE, 3, np.asarray([0]))     # gap: seq 2 missing
+    live = LiveIndex(small.index, delta_cap=256)
+    with pytest.raises(WALCorruptError, match="sequence gap"):
+        wal.replay_into(live)
+    wal.close()
+
+
+def test_wal_rejects_foreign_file(tmp_path):
+    path = str(tmp_path / "notawal.bin")
+    with open(path, "wb") as f:
+        f.write(b"definitely not a WAL file")
+    with pytest.raises(WALCorruptError, match="magic"):
+        MutationWAL(path)
+
+
+# -- satellite: actionable checkpoint errors --------------------------------
+
+def test_missing_index_json_actionable(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    step_dir = tmp_path / "step_00000007"
+    step_dir.mkdir()
+    with pytest.raises(CheckpointError, match="index.json"):
+        mgr.load_arrays(7)
+
+
+def test_truncated_index_json_actionable(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    step_dir = tmp_path / "step_00000003"
+    step_dir.mkdir()
+    (step_dir / "index.json").write_text('{"step": 3, "keys": [')
+    with pytest.raises(CheckpointError, match="truncated or corrupt"):
+        mgr.load_arrays(3)
+
+
+def test_truncated_array_actionable(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(5, {"a": np.arange(1000, dtype=np.float32)})
+    arr = tmp_path / "step_00000005" / "arr_00000.npy"
+    arr.write_bytes(arr.read_bytes()[:40])        # truncate the file
+    with pytest.raises(CheckpointError, match="truncated or corrupt"):
+        mgr.load_arrays(5)
+    with pytest.raises(CheckpointError, match="truncated or corrupt"):
+        mgr.restore({"a": np.zeros(1000, np.float32)}, step=5)
+
+
+def test_missing_array_file_actionable(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(2, {"a": np.arange(8)})
+    os.remove(tmp_path / "step_00000002" / "arr_00000.npy")
+    with pytest.raises(CheckpointError, match="missing array file"):
+        mgr.load_arrays(2)
+
+
+def test_registry_restore_wrong_schema_actionable(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, {"weights": np.zeros(4)})         # not an index snapshot
+    with pytest.raises(CheckpointError, match="IndexRegistry.save"):
+        IndexRegistry.restore(mgr)
