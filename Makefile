@@ -14,12 +14,24 @@ bench:
 	$(PY) -m benchmarks.run
 
 # minutes-scale benchmark pass (CI): tiny substrate, then assert every
-# JSON artifact parses
+# JSON artifact parses and BENCH_kernels.json carries the pipelined /
+# packed-sort / chunk-x-blk_l sweep schema
 bench-smoke:
 	$(PY) -m benchmarks.run --smoke
 	$(PY) -c "import json; \
 	  [json.load(open('artifacts/BENCH_' + n + '.json')) \
-	   for n in ('kernels', 'table2', 'serving')]; \
+	   for n in ('table2', 'serving')]; \
+	  d = json.load(open('artifacts/BENCH_kernels.json')); \
+	  assert {'rows', 'fused_sweep', 'sort', 'backend'} <= d.keys(); \
+	  assert d['fused_sweep'], 'empty fused sweep'; \
+	  assert all({'chunk', 'blk_l', 'us', 'pipelined', 'delta'} \
+	             <= r.keys() for r in d['fused_sweep']); \
+	  assert any(r['delta'] for r in d['fused_sweep']), \
+	         'no in-kernel-delta row'; \
+	  s = d['sort']; \
+	  assert s['packed_us'] > 0 and s['tagged_us'] > 0; \
+	  assert any(r['us'] is None for r in d['rows']) \
+	         or d['pipelined_available'], 'pipelined row missing'; \
 	  print('bench artifacts OK')"
 
 # seeded chaos drills on a tiny substrate: crash + WAL recovery must be

@@ -6,6 +6,15 @@ hardware numbers; what we measure here is (a) allclose vs the ref and
 (b) wall time of each path on this backend — the ``*_ref_xla`` rows are
 the CPU baseline the TPU kernels replace, the ``*_ops`` rows catch
 dispatch-path regressions. Printed as name,us_per_call,max_err CSV.
+
+``main`` returns the BENCH_kernels.json artifact: the legacy ``rows``
+plus a ``fused_sweep`` (chunk × blk_l, pipelined/unpipelined, with and
+without the in-kernel delta stream), a ``sort`` section timing the
+packed (score,id) network against the legacy three-lane tagged
+network, and backend metadata.  ``pltpu.emit_pipeline`` asserts a real
+TPU at trace time, so on CPU the pipelined variants are recorded as
+pending (``us: null``) — the speedup claim is documented as pending a
+TPU run, not measured in interpret mode.
 """
 from __future__ import annotations
 
@@ -17,7 +26,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref, sort
 
 
 def _time(fn, *args, reps: int = 5) -> float:
@@ -34,7 +43,55 @@ def _err(a, b) -> float:
         jnp.asarray(a) - jnp.asarray(b), neginf=0.0, posinf=0.0))))
 
 
-def main(smoke: bool = False) -> List[Dict]:
+def _bitonic_desc_tagged_legacy(s, i, t):
+    """The fused kernel's pre-packed three-lane sort (score f32, id
+    i32, tag i32 — three shuffles + three selects per pass), kept here
+    ONLY as the packed-vs-tagged benchmark baseline."""
+    r, m = s.shape
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, m), 1)
+    stages = int(np.log2(m))
+
+    def partner(x, jj):
+        x3 = x.reshape(r, m // (2 * jj), 2, jj)
+        return jnp.flip(x3, axis=2).reshape(r, m)
+
+    for stage in range(1, stages + 1):
+        kk = 1 << stage
+        for jj in (1 << p for p in range(stage - 1, -1, -1)):
+            keep_max = jnp.where((idx & kk) == 0,
+                                 (idx & jj) == 0,
+                                 (idx & jj) != 0)
+            ps, pi, pt = partner(s, jj), partner(i, jj), partner(t, jj)
+            take_p = jnp.where(keep_max, ps > s, ps < s)
+            s = jnp.where(take_p, ps, s)
+            i = jnp.where(take_p, pi, i)
+            t = jnp.where(take_p, pt, t)
+    return s, i, t
+
+
+def _sort_section(reps: int, smoke: bool) -> Dict:
+    """Packed (2-word record) vs legacy tagged (3-lane) network."""
+    rng = np.random.default_rng(17)
+    r, m = (64, 512) if not smoke else (16, 512)
+    sc = jnp.asarray(rng.normal(size=(r, m)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 1 << 29, (r, m)).astype(np.int32))
+    tags = jnp.zeros((r, m), jnp.int32)
+
+    packed = jax.jit(lambda s, i: sort.bitonic_desc_packed(
+        sort.pack(sort.score_to_key(s), i)))
+    tagged = jax.jit(_bitonic_desc_tagged_legacy)
+    out_p = packed(sc, ids)
+    out_t = tagged(sc, ids, tags)
+    np.testing.assert_array_equal(
+        np.asarray(sort.key_to_score(out_p[:, 0])), np.asarray(out_t[0]))
+    packed_us = _time(packed, sc, ids, reps=reps)
+    tagged_us = _time(tagged, sc, ids, tags, reps=reps)
+    return {"rows": r, "m": m, "packed_us": packed_us,
+            "tagged_us": tagged_us,
+            "speedup": tagged_us / max(packed_us, 1e-9)}
+
+
+def main(smoke: bool = False) -> Dict:
     rows = []
     reps = 2 if smoke else 5
 
@@ -99,7 +156,7 @@ def main(smoke: bool = False) -> List[Dict]:
               float(jnp.max(jnp.abs(o_ops[2] - o_ref[2]))))
     add("ivf_scan_merge_ref_xla", _time(jfused, reps=reps), err)
 
-    def sweep_chunk(chunk: int) -> float:
+    def sweep_chunk(chunk: int, blk_l: int = 64) -> float:
         """us for the full n_pr probes issued as n_pr/chunk dispatches."""
         offs = all_offs.reshape(B, n_pr // chunk, chunk)
         szs = jnp.full((B, chunk), lp - 6, jnp.int32)
@@ -109,7 +166,7 @@ def main(smoke: bool = False) -> List[Dict]:
             for j in range(n_pr // chunk):
                 snap_s, snap_i, _ = ops.ivf_scan_merge(
                     fq, fdocs, fids, offs[:, j], szs, s, i,
-                    k=kk, list_pad=lp, chunk=chunk)
+                    k=kk, list_pad=lp, chunk=chunk, blk_l=blk_l)
                 s, i = snap_s[:, -1], snap_i[:, -1]
             return s, i
 
@@ -117,6 +174,47 @@ def main(smoke: bool = False) -> List[Dict]:
 
     for chunk in ([4] if smoke else [1, 2, 4, 8]):
         add(f"ivf_scan_merge_ops_c{chunk}", sweep_chunk(chunk), err)
+
+    # chunk × blk_l sweep: dispatch granularity vs tile height.  The
+    # ops wrapper picks the tile streaming mode per backend: pipelined
+    # (double-buffered emit_pipeline) on TPU, the unrolled interpret
+    # fallback on CPU — so the pipelined variant is only measurable on
+    # real hardware and is recorded as pending elsewhere.
+    on_tpu = jax.default_backend() == "tpu"
+    fused_sweep = []
+    for chunk in ([4] if smoke else [2, 4, 8]):
+        for blk_l in ([64] if smoke else [64, 128, 256]):
+            fused_sweep.append({
+                "chunk": chunk, "blk_l": blk_l,
+                "pipelined": on_tpu, "delta": False,
+                "us": sweep_chunk(chunk, blk_l), "err": err})
+
+    # in-kernel delta stream: same probes plus a 256-entry buffer
+    # (second prefetch stream + per-slot gated merge, one dispatch)
+    dcap = 256
+    dl_vecs = r.normal(r.PRNGKey(14), (dcap, 64))
+    dl_ids = jnp.arange(dcap, dtype=jnp.int32) + 10 ** 7
+    dl_assign = jnp.zeros((dcap,), jnp.int32)     # never probed here
+    szs4 = jnp.full((B, 4), lp - 6, jnp.int32)
+    gates = jnp.full((B, 4), -2, jnp.int32)
+
+    def run_delta():
+        return ops.ivf_scan_merge(
+            fq, fdocs, fids, all_offs[:, :4], szs4, rs, ri,
+            dl_vecs, dl_ids, dl_assign, gates,
+            k=kk, list_pad=lp, chunk=4)
+
+    fused_sweep.append({
+        "chunk": 4, "blk_l": 64, "pipelined": on_tpu, "delta": True,
+        "us": _time(run_delta, reps=reps), "err": err})
+    for row in fused_sweep:
+        mode = "pipelined" if row["pipelined"] else "unpipelined"
+        tag = "_delta" if row["delta"] else ""
+        add(f"fused_{mode}_c{row['chunk']}_blk{row['blk_l']}{tag}",
+            row["us"], row["err"])
+    if not on_tpu:
+        # emit_pipeline cannot trace off-TPU: document, don't fake
+        add("fused_pipelined_c4_blk64", None, None)
 
     # delta scan (live-mutation buffer brute force)
     dvecs = r.normal(r.PRNGKey(13), (1024, 64))
@@ -136,8 +234,17 @@ def main(smoke: bool = False) -> List[Dict]:
     # the single err check above already exercises the ops path
 
     for row in rows:
-        print(f"{row['name']},{row['us']:.1f},{row['err']:.2e}")
-    return rows
+        us = "pending" if row["us"] is None else f"{row['us']:.1f}"
+        err = "" if row["err"] is None else f"{row['err']:.2e}"
+        print(f"{row['name']},{us},{err}")
+    return {
+        "rows": rows,
+        "fused_sweep": fused_sweep,
+        "sort": _sort_section(reps, smoke),
+        "backend": jax.default_backend(),
+        "pipelined_available": on_tpu,
+        "tpu_speedup": "pending TPU run" if not on_tpu else None,
+    }
 
 
 if __name__ == "__main__":

@@ -258,12 +258,13 @@ def search(index: IVFIndex, queries: jnp.ndarray, policy: Policy, *,
 
     ``delta`` (live-mutation subsystem, ``repro.index``): a fixed-
     capacity buffer of recently added vectors.  It is brute-force
-    scored once at probe 0 (``ops.delta_scan``), and each entry is
-    merged into the running top-k at the probe of its *assigned*
-    cluster, so phi/patience accounting — and therefore the result —
-    is bit-identical to searching a rebuilt index that physically
-    contains the delta docs in those lists.  Tombstoned docs carry
-    stored id -1 and are masked on every path.
+    scored once per query — by ``ops.delta_scan`` on the per-probe
+    path, or *inside* the fused kernel as a second prefetch stream —
+    and each entry is merged into the running top-k at the probe of
+    its *assigned* cluster, so phi/patience accounting — and therefore
+    the result — is bit-identical to searching a rebuilt index that
+    physically contains the delta docs in those lists.  Tombstoned
+    docs carry stored id -1 and are masked on every path.
     """
     if use_fused_kernel or use_scan_kernel:
         # the kernels trust blk_l-aligned offsets: fail loudly up front
@@ -293,10 +294,12 @@ def _search(index: IVFIndex, queries: jnp.ndarray, policy: Policy,
     csims = queries @ index.centroids.T                       # (B, C)
     rank_sims, cluster_rank = jax.lax.top_k(csims, n_rank)    # (B, N)
 
-    if delta is not None:
+    if delta is not None and not use_fused_kernel:
         from repro.kernels import ops as kops
         # probe-0 brute-force scan of the whole delta buffer; each
-        # entry is *merged* only at the probe of its assigned cluster
+        # entry is *merged* only at the probe of its assigned cluster.
+        # (The fused path scores the buffer inside the kernel instead —
+        # a second prefetch stream — so it skips this dispatch.)
         d_sc = kops.delta_scan(queries, delta.vecs)           # (B, cap)
         d_valid = (delta.ids >= 0)[None, :]                   # (1, cap)
         d_ids = jnp.broadcast_to(delta.ids[None, :], d_sc.shape)
@@ -389,40 +392,32 @@ def _search(index: IVFIndex, queries: jnp.ndarray, policy: Policy,
             idx = jnp.clip(s.h + rel, 0, n_rank - 1)
             cids = jnp.take(cluster_rank, idx, axis=1)        # (B, chunk)
             offs = jnp.take(index.cluster_offsets, cids)
-            sizes = jnp.where((s.h + rel < n_rank)[None, :],
+            slot_ok = (s.h + rel < n_rank)[None, :]
+            sizes = jnp.where(slot_ok,
                               jnp.take(index.cluster_sizes, cids), 0)
-            snap_s, snap_i, cnts = kops.ivf_scan_merge(
-                queries, index.docs, index.doc_ids, offs, sizes,
-                s.topk_scores, s.topk_ids, k=k,
-                list_pad=index.list_pad, chunk=chunk, blk_l=blk_l)
+            if delta is not None:
+                # delta buffer rides the kernel as a second prefetch
+                # stream; each entry merges at its assigned cluster's
+                # probe slot.  Slots past the budget gate on -2 (an
+                # empty slot's assign is -1, a real cluster id >= 0).
+                gates = jnp.where(slot_ok, cids, -2)
+                snap_s, snap_i, cnts = kops.ivf_scan_merge(
+                    queries, index.docs, index.doc_ids, offs, sizes,
+                    s.topk_scores, s.topk_ids, delta.vecs, delta.ids,
+                    delta.assign, gates, k=k,
+                    list_pad=index.list_pad, chunk=chunk, blk_l=blk_l)
+            else:
+                snap_s, snap_i, cnts = kops.ivf_scan_merge(
+                    queries, index.docs, index.doc_ids, offs, sizes,
+                    s.topk_scores, s.topk_ids, k=k,
+                    list_pad=index.list_pad, chunk=chunk, blk_l=blk_l)
         st = s
-        if use_fused_kernel and delta is not None:
-            # the kernel ran without delta entries; re-inject them per
-            # slot.  ``cum`` accumulates delta entries whose assigned
-            # cluster was probed at any slot <= t of this chunk: merging
-            # them into the slot's top-k snapshot reproduces the exact
-            # sequential merge (dropping a non-top-k candidate early
-            # can never change a later top-k), and the corrected state
-            # feeds the next dispatch's running top-k.
-            cum = jnp.zeros((B, d_sc.shape[1]), bool)
         for t in range(chunk):
             if use_fused_kernel:
-                if delta is not None:
-                    slot_ok = s.h + t < n_rank
-                    cum = cum | (d_valid & slot_ok
-                                 & (delta.assign[None, :]
-                                    == cids[:, t][:, None]))
-                    e_s, e_i = delta_candidates(cum)
-                    m_s, m_i = _merge_topk(snap_s[:, t], snap_i[:, t],
-                                           e_s, e_i, k, use_topk_kernel)
-                    # counts-phi is stale once delta entries join the
-                    # merge: recompute from id intersections instead
-                    st = slot_update(st, m_s, m_i, None)
-                else:
-                    phi_pre = (100.0
-                               * (k - cnts[:, t]).astype(jnp.float32) / k)
-                    st = slot_update(st, snap_s[:, t], snap_i[:, t],
-                                     phi_pre)
+                phi_pre = (100.0
+                           * (k - cnts[:, t]).astype(jnp.float32) / k)
+                st = slot_update(st, snap_s[:, t], snap_i[:, t],
+                                 phi_pre)
             else:
                 probe_idx = jnp.broadcast_to(
                     jnp.minimum(st.h, n_rank - 1), (B,))

@@ -119,13 +119,20 @@ def _advance(index: IVFIndex, state: LaneState,
         state = state._replace(topk_scores=ts0, topk_ids=ti0)
 
     if dview is not None:
-        from repro.kernels import ops as kops
-        d_sc = kops.delta_scan(state.qvec, dview.vecs)     # (W, cap)
-        d_valid = (dview.ids >= 0)[None, :]
+        # burn tombstoned buffer entries to id -1 up front (cheap
+        # elementwise op): both kernel paths then mask them exactly
+        # like empty slots, with no per-slot re-merge
+        d_ids_eff = dview.ids
         if dead is not None:
-            d_valid = d_valid & ~jnp.take(
-                dead, jnp.clip(dview.ids, 0, dead.shape[0] - 1))[None, :]
-        d_ids = jnp.broadcast_to(dview.ids[None, :], d_sc.shape)
+            gone = jnp.take(dead, jnp.clip(dview.ids, 0,
+                                           dead.shape[0] - 1)) \
+                & (dview.ids >= 0)
+            d_ids_eff = jnp.where(gone, -1, dview.ids)
+        if not use_fused:
+            from repro.kernels import ops as kops
+            d_sc = kops.delta_scan(state.qvec, dview.vecs)  # (W, cap)
+            d_valid = (d_ids_eff >= 0)[None, :]
+            d_ids = jnp.broadcast_to(d_ids_eff[None, :], d_sc.shape)
 
     def delta_cands(gate):
         return (jnp.where(gate, d_sc, -jnp.inf),
@@ -152,28 +159,25 @@ def _advance(index: IVFIndex, state: LaneState,
         slot_ok = ((state.h[:, None] + rel) < n_probe) \
             & state.active[:, None]
         sizes = jnp.where(slot_ok, jnp.take(index.cluster_sizes, cids), 0)
-        snap_s, snap_i, cnts = kops.ivf_scan_merge(
-            state.qvec, index.docs, index.doc_ids, offs, sizes,
-            state.topk_scores, state.topk_ids, k=k,
-            list_pad=index.list_pad, chunk=chunk)
-        st = state
         if dview is not None:
-            # the kernel ran without delta entries; re-inject them with
-            # the cumulative per-slot mask (see core.ivf._search)
-            cum = jnp.zeros((state.qvec.shape[0], d_sc.shape[1]), bool)
+            # delta buffer rides the kernel as a second prefetch
+            # stream, gated per slot on the assigned cluster id
+            # (see core.ivf._search): still ONE dispatch per chunk
+            gates = jnp.where(slot_ok, cids, -2)
+            snap_s, snap_i, cnts = kops.ivf_scan_merge(
+                state.qvec, index.docs, index.doc_ids, offs, sizes,
+                state.topk_scores, state.topk_ids, dview.vecs,
+                d_ids_eff, dview.assign, gates, k=k,
+                list_pad=index.list_pad, chunk=chunk)
+        else:
+            snap_s, snap_i, cnts = kops.ivf_scan_merge(
+                state.qvec, index.docs, index.doc_ids, offs, sizes,
+                state.topk_scores, state.topk_ids, k=k,
+                list_pad=index.list_pad, chunk=chunk)
+        st = state
         for t in range(chunk):
-            if dview is not None:
-                cum = cum | (d_valid & slot_ok[:, t][:, None]
-                             & (dview.assign[None, :]
-                                == cids[:, t][:, None]))
-                e_s, e_i = delta_cands(cum)
-                ms, mi = _merge_topk(snap_s[:, t], snap_i[:, t],
-                                     e_s, e_i, k)
-                phi_v = intersection_pct(st.topk_ids, mi)
-                st = slot(st, ms, mi, phi_v)
-            else:
-                phi_v = 100.0 * (k - cnts[:, t]).astype(jnp.float32) / k
-                st = slot(st, snap_s[:, t], snap_i[:, t], phi_v)
+            phi_v = 100.0 * (k - cnts[:, t]).astype(jnp.float32) / k
+            st = slot(st, snap_s[:, t], snap_i[:, t], phi_v)
         return st
 
     def body(_, st: LaneState) -> LaneState:

@@ -156,7 +156,11 @@ class LiveIndex:
 
     def _log(self, op: int, payload: Optional[np.ndarray] = None) -> None:
         if self.wal is not None and not self._replaying:
-            self.wal.append(op, self.seq + 1, payload)
+            # merge is a compaction boundary: force the group-commit
+            # batch to disk so the record (and everything before it)
+            # is durable before the expensive re-layout runs
+            self.wal.append(op, self.seq + 1, payload,
+                            force=(op == OP_MERGE))
 
     # -- host mirrors -------------------------------------------------------
     def _refresh_mirrors(self) -> None:

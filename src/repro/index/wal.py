@@ -81,11 +81,36 @@ def _decode_payload(raw: bytes) -> Optional[np.ndarray]:
 
 
 class MutationWAL:
-    """Append-only fsync'd mutation log (one writer, many readers)."""
+    """Append-only fsync'd mutation log (one writer, many readers).
 
-    def __init__(self, path: str, *, fsync: bool = True):
+    Group commit (high mutation rates): ``group_commit_n > 1`` defers
+    the fsync until that many records are pending, ``group_commit_ms``
+    until that much wall time has passed since the first pending
+    record (checked on the next append/flush — the API is synchronous,
+    there is no background flusher).  Records are still *written* (and
+    OS-visible to ``scan``) immediately; only durability is batched.
+    ``flush()`` forces the fsync, and is called automatically on
+    ``close`` and before ``truncate_upto`` — callers force it at
+    merge/snapshot boundaries so a snapshot never outruns its log.
+    Crash semantics are unchanged: the tail of the file is at worst a
+    batch of whole records plus one torn record, and replay already
+    tolerates a torn tail; durable-loss is bounded by the group window
+    instead of zero.  Defaults (``group_commit_n=1``) keep the classic
+    fsync-per-append behavior.
+    """
+
+    def __init__(self, path: str, *, fsync: bool = True,
+                 group_commit_n: int = 1, group_commit_ms: float = 0.0,
+                 clock=None):
+        import time as _time
         self.path = path
         self.fsync = fsync
+        self.group_commit_n = max(1, int(group_commit_n))
+        self.group_commit_ms = float(group_commit_ms)
+        self._now = clock or _time.monotonic
+        self._pending = 0            # records written but not fsync'd
+        self._group_t0: Optional[float] = None
+        self.fsyncs = 0              # accounting (tests/benchmarks)
         self.last_scan_torn = False
         size = os.path.getsize(path) if os.path.exists(path) else -1
         if 0 < size < len(FILE_MAGIC):
@@ -108,18 +133,42 @@ class MutationWAL:
         self._f.flush()
         if self.fsync:
             os.fsync(self._f.fileno())
+            self.fsyncs += 1
+        self._pending = 0
+        self._group_t0 = None
 
     def append(self, op: int, seq: int,
-               payload: Optional[np.ndarray] = None) -> None:
+               payload: Optional[np.ndarray] = None, *,
+               force: bool = False) -> None:
+        """Append one record.  ``force`` fsyncs regardless of the
+        group-commit window (merge/snapshot boundaries)."""
         if op not in _OP_NAMES:
             raise ValueError(f"unknown WAL op {op}")
         raw = _encode_payload(payload)
         hdr = _HDR.pack(_REC_MAGIC, op, seq, len(raw), zlib.crc32(raw))
         self._f.write(hdr + raw)         # single write: tail is one record
-        self._sync()
+        self._pending += 1
+        if self._group_t0 is None:
+            self._group_t0 = self._now()
+        due = (force or self._pending >= self.group_commit_n
+               or (self.group_commit_ms > 0
+                   and (self._now() - self._group_t0) * 1000.0
+                   >= self.group_commit_ms))
+        if due:
+            self._sync()
+        else:
+            self._f.flush()              # OS-visible, not yet durable
+
+    def flush(self) -> None:
+        """Force any pending group-commit batch to disk."""
+        if self._pending:
+            self._sync()
+        else:
+            self._f.flush()
 
     def close(self) -> None:
         if not self._f.closed:
+            self.flush()                 # never drop a pending batch
             self._f.close()
 
     def __enter__(self) -> "MutationWAL":
@@ -210,6 +259,7 @@ class MutationWAL:
         """Drop records with ``seq <=`` the given snapshot sequence
         (log compaction after a successful snapshot).  Returns the
         number of records kept.  Atomic: rewrite + rename."""
+        self.flush()                     # batch must land before rewrite
         keep = [r for r in self.scan() if r.seq > seq]
         tmp = self.path + ".tmp"
         with open(tmp, "wb") as f:

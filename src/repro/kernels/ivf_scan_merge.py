@@ -3,29 +3,42 @@
 Memory / dispatch model
 -----------------------
 The unfused hot loop costs two ``pallas_call`` dispatches per probe and
-round-trips the raw ``(B, list_pad)`` score tile through HBM between the
-scan (``ivf_scan.py``) and the merge (``topk_merge.py``).  This kernel
-fuses the paper's whole inner loop — probe -> score -> merge — over a
-*chunk* of probes in a single launch:
+round-trips the raw ``(B, list_pad)`` score tile through HBM between
+the scan (``ivf_scan.py``) and the merge (``topk_merge.py``).  This
+kernel fuses the paper's whole inner loop — probe -> score -> merge —
+over a *chunk* of probes in a single launch, and (optionally) folds the
+live-mutation delta-buffer scan in as a second stream:
 
-* grid ``(B, chunk, list_pad // blk_l)``; the last dimension is
-  innermost, so for each query ``i`` the kernel walks its ``chunk``
-  probed clusters tile by tile.
-* per-(query, probe) cluster tiles stream HBM -> VMEM via
-  scalar-prefetched block offsets (``PrefetchScalarGridSpec``), so the
-  DMA engine fetches probe ``j+1``'s tile while the MXU scores probe
-  ``j``.  Offsets must be ``blk_l``-aligned (``build_index(align=...)``
-  guarantees it).
-* raw scores NEVER touch HBM: each ``(blk_l,)`` score strip lands in a
-  VMEM scratch accumulator; once a probe's ``list_pad`` strip is
-  complete it is masked by the true list size and bitonic-merged into a
-  running top-k held in VMEM scratch for the whole chunk.
-* every running-top-k lane carries the probe index it entered on
-  (``tag``; -1 for candidates inherited from the incoming running
-  top-k), so the per-probe *new-entry count* — and therefore the
-  patience stability signal ``phi = 100 * (k - new_entries) / k`` —
-  falls out of the merge for free, with no ``intersection_pct``
-  re-computation on (B, k) id sets.
+* grid ``(B, chunk)``; for each query ``i`` the kernel walks its
+  ``chunk`` probed clusters one probe per step.
+* cluster tiles live in HBM (``memory_space=ANY``) and stream to VMEM
+  through a double-buffered ``pltpu.emit_pipeline`` whose block index
+  map is the scalar-prefetched ``blk_l``-aligned list offset
+  (``build_index(align=...)`` guarantees alignment): the MXU scores
+  tile ``t`` while the DMA engine copies tile ``t+1``.  On CPU
+  (interpret mode) the same per-tile body runs as an unrolled loop of
+  dynamic-slice reads — ``emit_pipeline`` asserts a real TPU at trace
+  time, so the ``pipelined`` flag is static.
+* raw scores NEVER touch HBM: each ``(blk_l,)`` strip lands in a VMEM
+  scratch accumulator; once a probe's ``list_pad`` strip is complete it
+  is masked by the true list size and merged into the packed running
+  top-k via the shared bitonic network (``kernels/sort.py``): score
+  keys in one int32 word, the doc id in the other, so every
+  compare-exchange moves one stacked record instead of three lanes.
+* the per-probe *new-entry count* — and therefore the patience signal
+  ``phi = 100 * (k - new_entries) / k`` — falls out of the merge for
+  free: entering candidates carry ``sort.NEW_MARK`` in their id word,
+  survivors still marked after the sort are this probe's new entries.
+  Marks are stripped before the snapshot is written.
+* **delta stream** (live mutation, ``repro.index``): the fixed-capacity
+  buffer of freshly added vectors is scored ONCE per query (at the
+  chunk's first probe) through a second prefetch pipeline into a VMEM
+  strip, then each entry is merged exactly at the probe slot of its
+  *assigned* cluster (scalar-prefetched ``gate_cids``; slots past the
+  probe budget gate on ``-2`` so they can never match an empty slot's
+  ``assign == -1``).  Because the running top-k already carries every
+  earlier merge, gating each entry once at its own probe reproduces the
+  sequential per-probe reference bit-for-bit — no host-side re-merge.
 
 Outputs per launch: per-probe top-k snapshots ``(B, chunk, k)`` scores
 and doc ids (so the caller can evaluate the exit policy at per-probe
@@ -41,7 +54,7 @@ way out so callers see the same empty-slot convention as the XLA path.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,153 +62,243 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import sort
+
 NEG = -1e30          # finite stand-in for -inf inside the sort network
 VALID_MIN = -1e29    # scores above this are real candidates
+KEY_NEG = sort.key_of(NEG)
+KEY_VALID = sort.key_of(VALID_MIN)
 
 
-def _bitonic_desc_tagged(s: jnp.ndarray, i: jnp.ndarray, t: jnp.ndarray
-                         ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Sort rows of s (R, M) descending, carrying ids i and tags t.
+def _score_tiles(docs_ref, ids_ref, bo, sbuf, ibuf, q, *, nblk: int,
+                 blk_l: int, d: int, pipelined: bool) -> None:
+    """Score ``nblk`` (blk_l, d) tiles starting at block row ``bo``.
 
-    M must be a power of two.  The XOR-partner permutation of each
-    compare-exchange pass is expressed as a reshape + reverse on a
-    length-2 axis (lane ^ jj flips one address bit), which lowers to
-    cheap lane shuffles and — unlike gather-based formulations — keeps
-    XLA/Mosaic compile time flat in the network depth.
+    ``docs_ref``/``ids_ref`` live in ANY (HBM) space.  Pipelined: a
+    double-buffered ``emit_pipeline`` whose index map adds the
+    prefetched block offset, overlapping each tile's DMA with the
+    previous tile's MXU dot.  Interpret fallback: the same per-tile
+    compute as an unrolled dynamic-slice loop.
     """
-    r, m = s.shape
-    idx = jax.lax.broadcasted_iota(jnp.int32, (1, m), 1)
-    stages = int(np.log2(m))
+    def tile_dot(tile, ids):
+        return (jax.lax.dot_general(
+            q, tile.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32), ids)
 
-    def partner(x, jj):
-        x3 = x.reshape(r, m // (2 * jj), 2, jj)
-        return jnp.flip(x3, axis=2).reshape(r, m)
+    if pipelined:
+        def body(doc_t, id_t):
+            t = pl.program_id(0)
+            s, ids = tile_dot(doc_t[...], id_t[...])
+            sbuf[pl.ds(t, 1)] = s
+            ibuf[pl.ds(t, 1)] = ids
+        pltpu.emit_pipeline(
+            body, grid=(nblk,),
+            in_specs=[pl.BlockSpec((blk_l, d), lambda t: (bo + t, 0)),
+                      pl.BlockSpec((1, blk_l), lambda t: (bo + t, 0))],
+            out_specs=(),
+        )(docs_ref, ids_ref)
+    else:
+        for t in range(nblk):
+            tile = docs_ref[pl.ds((bo + t) * blk_l, blk_l), :]
+            ids = ids_ref[pl.ds(bo + t, 1), :]
+            s, ids = tile_dot(tile, ids)
+            sbuf[pl.ds(t, 1)] = s
+            ibuf[pl.ds(t, 1)] = ids
 
-    for stage in range(1, stages + 1):
-        kk = 1 << stage
-        for jj in (1 << p for p in range(stage - 1, -1, -1)):
-            # per-lane mask: keep the max in descending blocks' low
-            # lanes and ascending blocks' high lanes
-            keep_max = jnp.where((idx & kk) == 0,
-                                 (idx & jj) == 0,
-                                 (idx & jj) != 0)
-            ps, pi, pt = partner(s, jj), partner(i, jj), partner(t, jj)
-            take_p = jnp.where(keep_max, ps > s, ps < s)
-            s = jnp.where(take_p, ps, s)
-            i = jnp.where(take_p, pi, i)
-            t = jnp.where(take_p, pt, t)
-    return s, i, t
+
+def _score_delta(dvec_ref, dsc, q, *, cap_pad: int, blk_dl: int, d: int,
+                 pipelined: bool) -> None:
+    """Second prefetch stream: score the whole delta buffer into the
+    (1, cap_pad) VMEM strip ``dsc`` (done once per query, at the
+    chunk's first probe slot)."""
+    nblk_d = cap_pad // blk_dl
+
+    def strip_dot(tile):
+        return jax.lax.dot_general(
+            q, tile.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    if pipelined:
+        def body(dv_t):
+            t = pl.program_id(0)
+            dsc[:, pl.ds(t * blk_dl, blk_dl)] = strip_dot(dv_t[...])
+        pltpu.emit_pipeline(
+            body, grid=(nblk_d,),
+            in_specs=[pl.BlockSpec((blk_dl, d), lambda t: (t, 0))],
+            out_specs=(),
+        )(dvec_ref)
+    else:
+        for t in range(nblk_d):
+            tile = dvec_ref[pl.ds(t * blk_dl, blk_dl), :]
+            dsc[:, pl.ds(t * blk_dl, blk_dl)] = strip_dot(tile)
 
 
-def _kernel(boffs_ref, sizes_ref, q_ref, docs_ref, ids_ref, ins_ref,
-            ini_ref, outs_ref, outi_ref, cnt_ref, sbuf, ibuf, ts, ti, tt,
-            *, k: int, chunk: int, blk_l: int, nblk: int, list_pad: int,
-            m_pad: int):
+def _kernel(*refs, k: int, chunk: int, blk_l: int, nblk: int,
+            list_pad: int, m_pad: int, d: int, pipelined: bool,
+            has_delta: bool, cap_pad: int, blk_dl: int, m2_pad: int):
+    if has_delta:
+        (boffs_ref, sizes_ref, gates_ref, q_ref, docs_ref, ids_ref,
+         ins_ref, ini_ref, dvec_ref, did_ref, das_ref, outs_ref,
+         outi_ref, cnt_ref, sbuf, ibuf, run_p, dsc) = refs
+    else:
+        (boffs_ref, sizes_ref, q_ref, docs_ref, ids_ref, ins_ref,
+         ini_ref, outs_ref, outi_ref, cnt_ref, sbuf, ibuf, run_p) = refs
     i = pl.program_id(0)
     j = pl.program_id(1)
-    tile_idx = pl.program_id(2)
-
-    # chunk start: load this query's incoming running top-k into scratch
-    @pl.when((j == 0) & (tile_idx == 0))
-    def _load_running():
-        s0 = jnp.pad(ins_ref[...], ((0, 0), (0, m_pad - k)),
-                     constant_values=NEG)
-        ts[...] = jnp.maximum(s0, NEG)          # clamp -inf empty slots
-        ti[...] = jnp.pad(ini_ref[...], ((0, 0), (0, m_pad - k)),
-                          constant_values=-1)
-        tt[...] = jnp.full((1, m_pad), -1, jnp.int32)
-
-    # score one (blk_l, d) strip of the probed cluster on the MXU
     q = q_ref[...].astype(jnp.float32)          # (1, d)
-    tile = docs_ref[...].astype(jnp.float32)    # (blk_l, d)
-    sbuf[pl.ds(tile_idx, 1)] = jax.lax.dot_general(
-        q, tile, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)     # (1, blk_l)
-    ibuf[pl.ds(tile_idx, 1)] = ids_ref[...]
 
-    # full probe tile scored: mask by list size and merge into top-k
-    @pl.when(tile_idx == nblk - 1)
-    def _merge():
-        size = sizes_ref[i * chunk + j]
-        new_s = sbuf[...].reshape(1, list_pad)
-        new_i = ibuf[...].reshape(1, list_pad)
-        lane = jax.lax.broadcasted_iota(jnp.int32, (1, list_pad), 1)
-        in_list = lane < size
-        new_i = jnp.where(in_list, new_i, -1)
-        # tombstones: deleted rows keep their vector but their stored id
-        # is burned to -1 (repro.index.live), so masking id < 0 hides
-        # both padding and deleted docs without an extra input stream
-        alive = in_list & (new_i >= 0)
-        new_s = jnp.where(alive, new_s, NEG)
-        new_t = jnp.where(alive, j, -1)
-        cand_s = jnp.concatenate([ts[:, :k], new_s], axis=1)
-        cand_i = jnp.concatenate([ti[:, :k], new_i], axis=1)
-        cand_t = jnp.concatenate([tt[:, :k], new_t], axis=1)
-        pad = m_pad - (k + list_pad)
-        if pad:
-            cand_s = jnp.pad(cand_s, ((0, 0), (0, pad)),
-                             constant_values=NEG)
-            cand_i = jnp.pad(cand_i, ((0, 0), (0, pad)),
-                             constant_values=-1)
-            cand_t = jnp.pad(cand_t, ((0, 0), (0, pad)),
-                             constant_values=-1)
-        ss, si, st = _bitonic_desc_tagged(cand_s, cand_i, cand_t)
-        ts[...] = ss
-        ti[...] = si
-        tt[...] = st
-        # lanes that survived from before this probe == |prev ∩ new|;
-        # phi = 100 * kept / k = 100 * (k - new_entries) / k
-        kept = jnp.sum(((ss[:, :k] > VALID_MIN) & (st[:, :k] < j))
-                       .astype(jnp.int32))
-        cnt_ref[...] = jnp.full((1, 1), k, jnp.int32) - kept
-        outs_ref[...] = ss[:, :k].reshape(1, 1, k)
-        outi_ref[...] = si[:, :k].reshape(1, 1, k)
+    # chunk start: load this query's incoming running top-k into the
+    # packed scratch, and score the delta buffer once
+    @pl.when(j == 0)
+    def _load_running():
+        s0 = jnp.maximum(ins_ref[...], NEG)     # clamp -inf empty slots
+        run_p[0:1] = sort.score_to_key(s0)
+        run_p[1:2] = ini_ref[...]
+        if has_delta:
+            _score_delta(dvec_ref, dsc, q, cap_pad=cap_pad,
+                         blk_dl=blk_dl, d=d, pipelined=pipelined)
+
+    # stream + score this probe's cluster tile (double-buffered on TPU)
+    bo = boffs_ref[i * chunk + j]
+    _score_tiles(docs_ref, ids_ref, bo, sbuf, ibuf, q, nblk=nblk,
+                 blk_l=blk_l, d=d, pipelined=pipelined)
+
+    # merge A: the probe tile, masked by true list size, NEW-marked
+    size = sizes_ref[i * chunk + j]
+    new_s = sbuf[...].reshape(1, list_pad)
+    new_i = ibuf[...].reshape(1, list_pad)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, list_pad), 1)
+    # tombstones: deleted rows keep their vector but their stored id is
+    # burned to -1 (repro.index.live), so masking id < 0 hides both
+    # padding and deleted docs without an extra input stream
+    alive = (lane < size) & (new_i >= 0)
+    new_k = jnp.where(alive, sort.score_to_key(new_s), KEY_NEG)
+    new_iw = jnp.where(alive, new_i | sort.NEW_MARK, -1)
+    res = sort.merge_packed(run_p[...].reshape(1, 2, k), new_k, new_iw,
+                            m_pad, pad_key=KEY_NEG)
+    run_p[...] = res[0, :, :k]
+
+    if has_delta:
+        # merge B: delta entries whose assigned cluster is THIS probe.
+        # Each entry is offered exactly once (its own slot); the running
+        # top-k already holds every earlier merge, so this reproduces
+        # the sequential per-probe reference.
+        gate_cid = gates_ref[i * chunk + j]
+        das = das_ref[...]                       # (1, cap_pad)
+        dio = did_ref[...]                       # (1, cap_pad)
+        gate = (das == gate_cid) & (dio >= 0)
+
+        @pl.when(jnp.any(gate))
+        def _merge_delta():
+            dk = jnp.where(gate, sort.score_to_key(dsc[...]), KEY_NEG)
+            diw = jnp.where(gate, dio | sort.NEW_MARK, -1)
+            res2 = sort.merge_packed(run_p[...].reshape(1, 2, k), dk,
+                                     diw, m2_pad, pad_key=KEY_NEG)
+            run_p[...] = res2[0, :, :k]
+
+    # lanes still NEW-marked survived this probe's merge(s):
+    # phi = 100 * kept / k = 100 * (k - new_entries) / k
+    keys = run_p[0:1, :]
+    idw = run_p[1:2, :]
+    kept = jnp.sum(((keys > KEY_VALID) & ~sort.is_marked(idw))
+                   .astype(jnp.int32))
+    cnt_ref[...] = jnp.full((1, 1), k, jnp.int32) - kept
+    clean = sort.strip_marks(idw)
+    run_p[1:2] = clean
+    outs_ref[...] = sort.key_to_score(keys).reshape(1, 1, k)
+    outi_ref[...] = clean.reshape(1, 1, k)
 
 
 def ivf_scan_merge(queries: jnp.ndarray, docs: jnp.ndarray,
                    ids2d: jnp.ndarray, block_offsets: jnp.ndarray,
                    sizes: jnp.ndarray, run_scores: jnp.ndarray,
                    run_ids: jnp.ndarray, *, k: int, list_pad: int,
-                   chunk: int, blk_l: int = 64, interpret: bool = False
+                   chunk: int, blk_l: int = 64,
+                   delta_vecs: Optional[jnp.ndarray] = None,
+                   delta_ids: Optional[jnp.ndarray] = None,
+                   delta_assign: Optional[jnp.ndarray] = None,
+                   gate_cids: Optional[jnp.ndarray] = None,
+                   blk_dl: int = 128, pipelined: bool = False,
+                   interpret: bool = False
                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """queries (B,d); docs (n,d) cluster-major; ids2d (n//blk_l, blk_l)
     doc ids reshaped row-blocked; block_offsets/sizes (B*chunk,) int32
     (offsets in blk_l units); run_scores/run_ids (B,k) incoming top-k.
+
+    Optional delta stream: delta_vecs (cap_pad, d) with cap_pad a
+    ``blk_dl`` multiple, delta_ids/delta_assign (1, cap_pad) int32
+    (id -1 = empty slot, assign -2 on padding), gate_cids (B*chunk,)
+    int32 — the probed cluster of each slot, or -2 for slots past the
+    probe budget.
+
+    ``pipelined`` (static): double-buffered ``emit_pipeline`` tile
+    streaming; requires a real TPU (the pipeline emitter asserts the
+    target generation at trace time), so interpret mode always runs
+    the unrolled dynamic-slice fallback of the same per-tile body.
 
     Returns per-probe snapshots (B, chunk, k) scores (NEG sentinel for
     empty slots) / ids, and (B, chunk) int32 new-entry counts.
     """
     b, d = queries.shape
     assert list_pad % blk_l == 0, "list_pad must be a blk_l multiple"
+    has_delta = delta_vecs is not None
     nblk = list_pad // blk_l
     m_pad = 1 << int(np.ceil(np.log2(k + list_pad)))
+    if has_delta:
+        cap_pad = delta_vecs.shape[0]
+        assert cap_pad % blk_dl == 0, "delta cap must be blk_dl-padded"
+        m2_pad = 1 << int(np.ceil(np.log2(k + cap_pad)))
+    else:
+        cap_pad, m2_pad = 0, 0
+    npf = 3 if has_delta else 2      # trailing scalar-prefetch ref args
+
+    def at_query(i, j, *_):
+        return (i, 0)
+
+    any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+    in_specs = [
+        pl.BlockSpec((1, d), at_query),          # queries
+        any_spec,                                # docs (HBM, pipelined)
+        any_spec,                                # ids2d
+        pl.BlockSpec((1, k), at_query),          # run_scores
+        pl.BlockSpec((1, k), at_query),          # run_ids
+    ]
+    inputs = [queries, docs, ids2d, run_scores, run_ids]
+    if has_delta:
+        in_specs += [
+            any_spec,                            # delta vecs (HBM)
+            pl.BlockSpec((1, cap_pad), lambda *_: (0, 0)),
+            pl.BlockSpec((1, cap_pad), lambda *_: (0, 0)),
+        ]
+        inputs += [delta_vecs, delta_ids.reshape(1, cap_pad),
+                   delta_assign.reshape(1, cap_pad)]
+    scratch = [
+        pltpu.VMEM((nblk, blk_l), jnp.float32),  # probe score strip
+        pltpu.VMEM((nblk, blk_l), jnp.int32),    # probe id strip
+        pltpu.VMEM((2, k), jnp.int32),           # packed running top-k
+    ]
+    if has_delta:
+        scratch.append(pltpu.VMEM((1, cap_pad), jnp.float32))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(b, chunk, nblk),
-        in_specs=[
-            pl.BlockSpec((1, d), lambda i, j, l, bo, sz: (i, 0)),
-            pl.BlockSpec((blk_l, d),
-                         lambda i, j, l, bo, sz: (bo[i * chunk + j] + l, 0)),
-            pl.BlockSpec((1, blk_l),
-                         lambda i, j, l, bo, sz: (bo[i * chunk + j] + l, 0)),
-            pl.BlockSpec((1, k), lambda i, j, l, bo, sz: (i, 0)),
-            pl.BlockSpec((1, k), lambda i, j, l, bo, sz: (i, 0)),
-        ],
+        num_scalar_prefetch=npf,
+        grid=(b, chunk),
+        in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((1, 1, k), lambda i, j, l, bo, sz: (i, j, 0)),
-            pl.BlockSpec((1, 1, k), lambda i, j, l, bo, sz: (i, j, 0)),
-            pl.BlockSpec((1, 1), lambda i, j, l, bo, sz: (i, j)),
+            pl.BlockSpec((1, 1, k), lambda i, j, *_: (i, j, 0)),
+            pl.BlockSpec((1, 1, k), lambda i, j, *_: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, *_: (i, j)),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((nblk, blk_l), jnp.float32),   # probe score strip
-            pltpu.VMEM((nblk, blk_l), jnp.int32),     # probe id strip
-            pltpu.VMEM((1, m_pad), jnp.float32),      # running top-k scores
-            pltpu.VMEM((1, m_pad), jnp.int32),        # running top-k ids
-            pltpu.VMEM((1, m_pad), jnp.int32),        # entry-probe tags
-        ],
+        scratch_shapes=scratch,
     )
-    kern = functools.partial(_kernel, k=k, chunk=chunk, blk_l=blk_l,
-                             nblk=nblk, list_pad=list_pad, m_pad=m_pad)
+    kern = functools.partial(
+        _kernel, k=k, chunk=chunk, blk_l=blk_l, nblk=nblk,
+        list_pad=list_pad, m_pad=m_pad, d=d, pipelined=pipelined,
+        has_delta=has_delta, cap_pad=cap_pad, blk_dl=blk_dl,
+        m2_pad=m2_pad)
+    prefetch = [block_offsets.astype(jnp.int32), sizes.astype(jnp.int32)]
+    if has_delta:
+        prefetch.append(gate_cids.astype(jnp.int32))
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
@@ -203,5 +306,4 @@ def ivf_scan_merge(queries: jnp.ndarray, docs: jnp.ndarray,
                    jax.ShapeDtypeStruct((b, chunk, k), jnp.int32),
                    jax.ShapeDtypeStruct((b, chunk), jnp.int32)],
         interpret=interpret,
-    )(block_offsets.astype(jnp.int32), sizes.astype(jnp.int32),
-      queries, docs, ids2d, run_scores, run_ids)
+    )(*prefetch, *inputs)

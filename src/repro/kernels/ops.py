@@ -12,6 +12,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import delta_scan as _ds
 from repro.kernels import embedding_bag as _eb
@@ -43,10 +44,13 @@ def ivf_scan(queries, docs, offsets, sizes, *, list_pad: int,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "list_pad", "chunk", "blk_l"))
+    jax.jit, static_argnames=("k", "list_pad", "chunk", "blk_l",
+                              "blk_dl"))
 def ivf_scan_merge(queries, docs, doc_ids, offsets, sizes, run_scores,
-                   run_ids, *, k: int, list_pad: int, chunk: int,
-                   blk_l: int = 64
+                   run_ids, delta_vecs=None, delta_ids=None,
+                   delta_assign=None, gate_cids=None, *, k: int,
+                   list_pad: int, chunk: int, blk_l: int = 64,
+                   blk_dl: int = 128
                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Fused multi-probe scan -> running top-k merge (one dispatch per
     ``chunk`` probes; see ivf_scan_merge.py for the memory model).
@@ -56,16 +60,38 @@ def ivf_scan_merge(queries, docs, doc_ids, offsets, sizes, run_scores,
     running top-k.  Returns ((B, chunk, k) snapshot scores with -inf
     empty slots, (B, chunk, k) snapshot ids, (B, chunk) new-entry
     counts with phi = 100 * (k - count) / k).
+
+    Live-mutation overlay (all four together or none): delta_vecs
+    (cap, d) / delta_ids / delta_assign (cap,) — the delta buffer, id
+    -1 on empty or tombstoned slots — and gate_cids (B, chunk), the
+    probed cluster id of each slot or -2 for slots past the probe
+    budget.  The buffer is scored in-kernel as a second prefetch
+    stream and each entry merges at its assigned cluster's probe slot,
+    so the counts (and phi) stay exact — one Pallas dispatch per
+    chunk, no host-side re-merge.
     """
     n = doc_ids.shape[0]
     tail = (-n) % blk_l
     ids2d = jnp.pad(doc_ids, (0, tail),
                     constant_values=-1).reshape(-1, blk_l)
+    kw = {}
+    if delta_vecs is not None:
+        cap = delta_vecs.shape[0]
+        blk_dl = min(blk_dl, 1 << int(np.ceil(np.log2(max(cap, 1)))))
+        dtail = (-cap) % blk_dl
+        kw = dict(
+            delta_vecs=jnp.pad(delta_vecs, ((0, dtail), (0, 0))),
+            delta_ids=jnp.pad(delta_ids, (0, dtail),
+                              constant_values=-1),
+            delta_assign=jnp.pad(delta_assign, (0, dtail),
+                                 constant_values=-2),
+            gate_cids=gate_cids.reshape(-1), blk_dl=blk_dl)
     out_s, out_i, cnt = _sm.ivf_scan_merge(
         queries, docs, ids2d,
         (offsets // blk_l).reshape(-1), sizes.reshape(-1),
         run_scores, run_ids, k=k, list_pad=list_pad, chunk=chunk,
-        blk_l=blk_l, interpret=_interpret())
+        blk_l=blk_l, pipelined=not _interpret(),
+        interpret=_interpret(), **kw)
     # sentinel -> -inf so empty slots match the XLA merge convention
     out_s = jnp.where(out_s > _sm.VALID_MIN, out_s, -jnp.inf)
     return out_s, out_i, cnt

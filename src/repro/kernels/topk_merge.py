@@ -1,10 +1,11 @@
-"""Top-k merge kernel: bitonic sort network over (running-k ++ new-L).
+"""Top-k merge kernel: packed bitonic network over (running-k ++ new-L).
 
 The A-kNN inner loop merges each query's running top-k with list_pad
-fresh scores every probe. The network is static (built from XOR-partner
-permutations), so it lowers to lane shuffles on the VPU — no
-data-dependent control flow. Scores ride with their doc ids through the
-compare-exchange.
+fresh scores every probe.  The network is the shared packed sort
+(``kernels/sort.py``): scores are monotone-mapped into int32 keys and
+ride stacked with their doc ids through a static XOR-partner
+compare-exchange network — one shuffle + one select per pass for the
+whole (score, id) record, no data-dependent control flow.
 """
 from __future__ import annotations
 
@@ -16,39 +17,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels import sort
+
 NEG_INF = -jnp.inf
-
-
-def _bitonic_desc(s: jnp.ndarray, i: jnp.ndarray
-                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Sort rows of s (B, M) descending, carrying i. M = power of 2.
-
-    The lane ^ jj partner permutation of each compare-exchange pass is
-    a reshape + reverse on a length-2 axis (flip one address bit); this
-    lowers to lane shuffles and keeps compile time flat in network
-    depth, unlike gather-based (jnp.take) formulations.
-    """
-    b, m = s.shape
-    idx = jnp.arange(m)
-    stages = int(np.log2(m))
-
-    def partner(x, jj):
-        return jnp.flip(x.reshape(b, m // (2 * jj), 2, jj),
-                        axis=2).reshape(b, m)
-
-    for st in range(1, stages + 1):
-        kk = 1 << st
-        for jj in (1 << p for p in range(st - 1, -1, -1)):
-            ps = partner(s, jj)
-            pi = partner(i, jj)
-            up = (idx & kk) == 0            # descending blocks
-            is_lo = (idx & jj) == 0
-            # lane keeps max if (descending and lower) or (asc and upper)
-            keep_max = jnp.where(up, is_lo, ~is_lo)[None, :]
-            take_p = jnp.where(keep_max, ps > s, ps < s)
-            s = jnp.where(take_p, ps, s)
-            i = jnp.where(take_p, pi, i)
-    return s, i
+_KEY_NEG = sort.key_of(-1e30)
 
 
 def _kernel(s_ref, i_ref, ns_ref, ni_ref, os_ref, oi_ref, *, k: int,
@@ -59,10 +31,12 @@ def _kernel(s_ref, i_ref, ns_ref, ni_ref, os_ref, oi_ref, *, k: int,
     if pad:
         s = jnp.pad(s, ((0, 0), (0, pad)), constant_values=-1e30)
         i = jnp.pad(i, ((0, 0), (0, pad)), constant_values=-1)
+    # NaN/±inf clamp BEFORE the key map: every non-finite score becomes
+    # the -1e30 sentinel, so NaNs cannot leak above +inf in key space
     s = jnp.where(jnp.isfinite(s), s, -1e30)
-    ss, si = _bitonic_desc(s, i)
-    os_ref[...] = ss[:, :k]
-    oi_ref[...] = si[:, :k]
+    out = sort.bitonic_desc_packed(sort.pack(sort.score_to_key(s), i))
+    os_ref[...] = sort.key_to_score(out[:, 0, :k])
+    oi_ref[...] = out[:, 1, :k]
 
 
 def topk_merge(scores: jnp.ndarray, ids: jnp.ndarray,
@@ -83,11 +57,11 @@ def topk_merge(scores: jnp.ndarray, ids: jnp.ndarray,
         in_specs=[specs(scores.shape[1]), specs(ids.shape[1]),
                   specs(new_scores.shape[1]), specs(new_ids.shape[1])],
         out_specs=[specs(k), specs(k)],
-        out_shape=[jax.ShapeDtypeStruct((b, k), scores.dtype),
+        out_shape=[jax.ShapeDtypeStruct((b, k), jnp.float32),
                    jax.ShapeDtypeStruct((b, k), ids.dtype)],
         interpret=interpret,
     )(scores, ids, new_scores, new_ids)
     # the kernel clamps -inf to -1e30 for the sort network; map the
     # sentinel back so empty slots match the XLA merge (-inf) exactly
     out_s = jnp.where(out_s > -1e29, out_s, NEG_INF)
-    return out_s, out_i
+    return out_s.astype(scores.dtype), out_i

@@ -1,0 +1,159 @@
+"""Packed (score, id) sort: the shared bitonic network and its
+monotone f32 -> i32 key map (kernels/sort.py).
+
+Edge cases the fused kernel and topk_merge lean on: exact-score ties,
+NaN / -inf scores, tombstoned -1 ids, k larger than the candidate
+count, and negative scores round-tripping the bit-pack exactly.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import ops, sort
+
+
+def _np_keys(vals):
+    return np.asarray(sort.score_to_key(jnp.asarray(
+        np.asarray(vals, np.float32))))
+
+
+# -- key map ----------------------------------------------------------------
+
+def test_key_map_roundtrips_bit_exactly():
+    rng = np.random.default_rng(0)
+    vals = np.concatenate([
+        (rng.normal(size=2000) * 10.0 ** rng.integers(-30, 30, 2000)
+         ).astype(np.float32),
+        np.float32([0.0, -0.0, 1e-44, -1e-44, np.inf, -np.inf,
+                    -1e30, -1e29, 1e30, -3.5, 3.5]),
+    ])
+    keys = sort.score_to_key(jnp.asarray(vals))
+    back = np.asarray(sort.key_to_score(keys))
+    # bit-exact, including -0.0 vs 0.0 and denormals
+    np.testing.assert_array_equal(back.view(np.int32),
+                                  vals.view(np.int32))
+
+
+def test_key_map_is_strictly_monotone_incl_negatives():
+    rng = np.random.default_rng(1)
+    vals = np.concatenate([
+        rng.normal(scale=1e3, size=4000).astype(np.float32),
+        np.float32([-np.inf, -1e30, -1e-40, -0.0, 0.0, 1e-40, np.inf]),
+    ])
+    keys = _np_keys(vals).astype(np.int64)
+    i = rng.integers(0, vals.size, 8000)
+    j = rng.integers(0, vals.size, 8000)
+    np.testing.assert_array_equal(vals[i] < vals[j], keys[i] < keys[j])
+    np.testing.assert_array_equal(vals[i] > vals[j], keys[i] > keys[j])
+
+
+def test_host_key_of_matches_device_map():
+    for x in (-1e30, -1e29, 0.25, -0.25, float("-inf"), 1e30):
+        assert sort.key_of(x) == int(_np_keys([x])[0])
+
+
+# -- packed network ---------------------------------------------------------
+
+def _sorted_packed(scores, ids):
+    out = sort.bitonic_desc_packed(sort.pack(
+        sort.score_to_key(jnp.asarray(np.asarray(scores, np.float32))),
+        jnp.asarray(np.asarray(ids, np.int32))))
+    return (np.asarray(sort.key_to_score(out[:, 0])),
+            np.asarray(out[:, 1]))
+
+
+def test_matches_lexsort_on_random_rows():
+    rng = np.random.default_rng(2)
+    sc = rng.normal(size=(8, 64)).astype(np.float32)
+    ids = rng.integers(0, 1 << 29, size=(8, 64)).astype(np.int32)
+    out_s, out_i = _sorted_packed(sc, ids)
+    keys = _np_keys(sc).astype(np.int64)
+    for r in range(8):
+        order = np.lexsort((-ids[r].astype(np.int64), -keys[r]))
+        np.testing.assert_array_equal(out_s[r], sc[r][order])
+        np.testing.assert_array_equal(out_i[r], ids[r][order])
+
+
+def test_score_ties_break_by_id_descending():
+    sc = np.full((1, 8), 2.5, np.float32)
+    ids = np.asarray([[3, 7, 1, 5, 0, 6, 2, 4]], np.int32)
+    _, out_i = _sorted_packed(sc, ids)
+    np.testing.assert_array_equal(out_i[0], [7, 6, 5, 4, 3, 2, 1, 0])
+
+
+def test_tombstone_ids_sink_below_real_candidates():
+    # equal sentinel scores: -1 ids must lose ties against every real id
+    sc = np.asarray([[1.0, -1e30, 2.0, -1e30]], np.float32)
+    ids = np.asarray([[10, -1, 20, -1]], np.int32)
+    out_s, out_i = _sorted_packed(sc, ids)
+    np.testing.assert_array_equal(out_i[0], [20, 10, -1, -1])
+    np.testing.assert_array_equal(out_s[0][:2], [2.0, 1.0])
+
+
+def test_mark_helpers_preserve_minus_one():
+    ids = jnp.asarray([[5, -1, 0, (1 << 29)]], jnp.int32)
+    marked = sort.mark_new(ids)
+    np.testing.assert_array_equal(
+        np.asarray(marked),
+        [[5 | sort.NEW_MARK, -1, sort.NEW_MARK,
+          (1 << 29) | sort.NEW_MARK]])
+    np.testing.assert_array_equal(np.asarray(sort.is_marked(marked)),
+                                  [[True, False, True, True]])
+    np.testing.assert_array_equal(np.asarray(sort.strip_marks(marked)),
+                                  np.asarray(ids))
+
+
+# -- through the topk_merge kernel wrapper ----------------------------------
+
+def test_nan_and_neg_inf_scores_become_empty_slots():
+    s = jnp.asarray([[np.nan, 1.0, -np.inf, np.nan]], jnp.float32)
+    i = jnp.asarray([[7, 8, 9, 10]], jnp.int32)
+    ns = jnp.asarray([[2.0, -np.inf]], jnp.float32)
+    ni = jnp.asarray([[11, 12]], jnp.int32)
+    out_s, out_i = ops.topk_merge(s, i, ns, ni, 4)
+    np.testing.assert_array_equal(np.asarray(out_s[0])[:2], [2.0, 1.0])
+    np.testing.assert_array_equal(np.asarray(out_i[0])[:2], [11, 8])
+    # NaN / -inf candidates are demoted to empty (-inf) slots
+    assert np.all(np.isneginf(np.asarray(out_s[0])[2:]))
+
+
+def test_k_larger_than_candidate_count_pads_with_empty():
+    s = jnp.full((2, 3), -jnp.inf, jnp.float32)
+    i = jnp.full((2, 3), -1, jnp.int32)
+    ns = jnp.asarray([[4.0, 3.0], [1.0, -jnp.inf]], jnp.float32)
+    ni = jnp.asarray([[100, 200], [300, -1]], jnp.int32)
+    out_s, out_i = ops.topk_merge(s, i, ns, ni, 5)
+    np.testing.assert_array_equal(np.asarray(out_i),
+                                  [[100, 200, -1, -1, -1],
+                                   [300, -1, -1, -1, -1]])
+    assert np.all(np.isneginf(np.asarray(out_s[0])[2:]))
+    assert np.all(np.isneginf(np.asarray(out_s[1])[1:]))
+
+
+def test_negative_scores_survive_merge_exactly():
+    rng = np.random.default_rng(3)
+    s = jnp.asarray(-np.abs(rng.normal(size=(4, 10))).astype(np.float32))
+    i = jnp.asarray(rng.integers(0, 1000, (4, 10)).astype(np.int32))
+    ns = jnp.asarray(
+        -np.abs(rng.normal(size=(4, 30))).astype(np.float32) - 5.0)
+    ni = jnp.asarray(rng.integers(1000, 2000, (4, 30)).astype(np.int32))
+    out_s, out_i = ops.topk_merge(s, i, ns, ni, 10)
+    cat_s = np.concatenate([np.asarray(s), np.asarray(ns)], axis=1)
+    cat_i = np.concatenate([np.asarray(i), np.asarray(ni)], axis=1)
+    for r in range(4):
+        order = np.argsort(-cat_s[r], kind="stable")[:10]
+        # all-negative inputs round-trip the bit-pack with zero error
+        np.testing.assert_array_equal(np.sort(np.asarray(out_s[r])),
+                                      np.sort(cat_s[r][order]))
+        np.testing.assert_array_equal(np.sort(np.asarray(out_i[r])),
+                                      np.sort(cat_i[r][order]))
+
+
+@pytest.mark.parametrize("m", [2, 8, 128, 512])
+def test_network_sizes_power_of_two(m):
+    rng = np.random.default_rng(m)
+    sc = rng.normal(size=(2, m)).astype(np.float32)
+    ids = rng.integers(0, 1 << 20, size=(2, m)).astype(np.int32)
+    out_s, _ = _sorted_packed(sc, ids)
+    np.testing.assert_array_equal(out_s, -np.sort(-sc, axis=1))

@@ -193,6 +193,103 @@ def test_wal_rejects_foreign_file(tmp_path):
         MutationWAL(path)
 
 
+# -- group commit: batched fsync, unchanged recovery semantics --------------
+
+def test_group_commit_batches_fsyncs(small, tmp_path):
+    """group_commit_n batches appends into one fsync; merge boundaries
+    and close() force the batch; recovery is still bit-identical."""
+    path = str(tmp_path / "wal.log")
+    wal = MutationWAL(path, group_commit_n=4)
+    base = wal.fsyncs                         # header sync
+    live = LiveIndex(small.index, delta_cap=256, wal=wal)
+    mgr = CheckpointManager(str(tmp_path / "snaps"), async_save=False)
+    IndexRegistry(version_of(live)).save(mgr)
+    for j in range(3):                        # 3 pending, below n=4
+        live.add(small.docs[4 * j: 4 * j + 4])
+    assert wal.fsyncs == base                 # nothing durable yet
+    assert wal._pending == 3
+    live.add(small.docs[12:16])               # 4th append: batch lands
+    assert wal.fsyncs == base + 1
+    assert wal._pending == 0
+    live.add(small.docs[16:20])               # 1 pending again
+    live.merge_delta()                        # boundary: forced fsync
+    assert wal.fsyncs == base + 2
+    assert wal._pending == 0
+    live.delete([0, 1])                       # pending at close
+    wal.close()                               # close flushes the batch
+    wal2 = MutationWAL(path)
+    _, recovered, rep = IndexRegistry.recover(mgr, wal2)
+    assert rep.applied == 7 and not rep.torn_tail
+    assert recovered.seq == live.seq
+    np.testing.assert_array_equal(
+        _results(recovered, small.queries)[0],
+        _results(live, small.queries)[0])
+    for got, want in zip(
+            _results(recovered, small.queries, use_fused_kernel=True,
+                     chunk=4),
+            _results(live, small.queries, use_fused_kernel=True,
+                     chunk=4)):
+        np.testing.assert_allclose(got, want, atol=1e-4)
+    wal2.close()
+
+
+def test_group_commit_ms_window_expires(small, tmp_path):
+    """The time trigger fires on the next append once group_commit_ms
+    has elapsed since the first pending record."""
+    t = [0.0]
+    wal = MutationWAL(str(tmp_path / "wal.log"), group_commit_n=100,
+                      group_commit_ms=50.0, clock=lambda: t[0])
+    base = wal.fsyncs
+    wal.append(OP_ADD, 1, small.docs[:2])
+    assert wal.fsyncs == base and wal._pending == 1
+    t[0] = 0.010                              # 10ms: still inside window
+    wal.append(OP_ADD, 2, small.docs[2:4])
+    assert wal.fsyncs == base and wal._pending == 2
+    t[0] = 0.060                              # 60ms > 50ms window
+    wal.append(OP_ADD, 3, small.docs[4:6])
+    assert wal.fsyncs == base + 1 and wal._pending == 0
+    wal.close()
+
+
+def test_group_commit_torn_tail_semantics_unchanged(small, tmp_path):
+    """Tearing the final record of a group-committed log behaves
+    exactly like the fsync-per-append WAL: the tail is dropped and
+    reported, every earlier record replays."""
+    path = str(tmp_path / "wal.log")
+    wal = MutationWAL(path, group_commit_n=8)
+    live = LiveIndex(small.index, delta_cap=256, wal=wal)
+    mgr = CheckpointManager(str(tmp_path / "snaps"), async_save=False)
+    IndexRegistry(version_of(live)).save(mgr)
+    live.add(small.docs[:4])
+    live.add(small.docs[4:8])
+    live.add(small.docs[8:12])
+    wal.close()                               # batch of 3 hits the disk
+    with open(path, "rb") as f:
+        full = f.read()
+    with open(path, "wb") as f:               # tear the last record
+        f.write(full[:-9])
+    wal2 = MutationWAL(path)
+    _, recovered, rep = IndexRegistry.recover(mgr, wal2)
+    assert rep.torn_tail
+    assert rep.applied == 2
+    assert recovered.seq == 2
+    wal2.close()
+
+
+def test_group_commit_scan_sees_pending_records(small, tmp_path):
+    """Pending (written-but-not-fsynced) records are OS-visible: scan
+    returns them, so same-process recovery never loses a batch."""
+    wal = MutationWAL(str(tmp_path / "wal.log"), group_commit_n=16)
+    wal.append(OP_ADD, 1, small.docs[:2])
+    wal.append(OP_DELETE, 2, np.asarray([0]))
+    assert wal._pending == 2
+    recs = wal.scan()
+    assert [r.seq for r in recs] == [1, 2]
+    wal.flush()
+    assert wal._pending == 0
+    wal.close()
+
+
 # -- satellite: actionable checkpoint errors --------------------------------
 
 def test_missing_index_json_actionable(tmp_path):
