@@ -32,10 +32,25 @@ bench-smoke:
 	  assert s['packed_us'] > 0 and s['tagged_us'] > 0; \
 	  assert any(r['us'] is None for r in d['rows']) \
 	         or d['pipelined_available'], 'pipelined row missing'; \
+	  sv = json.load(open('artifacts/BENCH_serving.json')); \
+	  gap = sv['live_stream']['recall_gap']; \
+	  assert gap <= 0.01, f'live-stream recall gap {gap} > 1%'; \
+	  r = json.load(open('artifacts/BENCH_resilience.json')); \
+	  rb = r['rebuild']; \
+	  assert {'crash_boundaries', 'swap_race', 'drift'} <= rb.keys(); \
+	  assert all({'failpoint', 'resolution', 'bit_identical', \
+	              'recovery_ms'} <= b.keys() \
+	             for b in rb['crash_boundaries']); \
+	  assert {'fenced', 'lost_mutations', 'recovered_bit_identical'} \
+	         <= rb['swap_race'].keys(); \
+	  assert {'recall_fixed', 'recall_rebuilt', 'rebuilds_triggered', \
+	          'recall_restored'} <= rb['drift'].keys(); \
 	  print('bench artifacts OK')"
 
 # seeded chaos drills on a tiny substrate: crash + WAL recovery must be
-# bit-identical, and the resilience artifact must be non-empty
+# bit-identical (including at every rebuild boundary), the rebuild
+# swap race must be epoch-fenced, and the drift drill must show the
+# rebuild restoring recall
 chaos-smoke:
 	$(PY) -m repro.launch.serve --chaos --n-docs 4000 --queries 64 \
 	  --clusters 32 --dim 24 --n-probe 16 --k 10
@@ -45,4 +60,17 @@ chaos-smoke:
 	  assert d['recovery']['crashes'] > 0, 'no crashes injected'; \
 	  assert len(d['deadline_curve']) > 0, 'empty deadline curve'; \
 	  assert d['shard_faults']['attempts'] > 0, 'shard drill did not run'; \
+	  rb = d['rebuild']; \
+	  bs = rb['crash_boundaries']; \
+	  assert len(bs) == 6, 'rebuild boundaries missing'; \
+	  assert all(b['bit_identical'] for b in bs), \
+	         'rebuild-crash recovery not bit-identical'; \
+	  assert {'aborted', 'committed'} \
+	         == {b['resolution'] for b in bs}, 'both windows required'; \
+	  sr = rb['swap_race']; \
+	  assert sr['fenced'] and sr['lost_mutations'] == 0 \
+	         and sr['recovered_bit_identical'], 'swap race not fenced'; \
+	  dr = rb['drift']; \
+	  assert dr['rebuilds_triggered'] > 0 and dr['recall_restored'], \
+	         'drift rebuild did not restore recall'; \
 	  print('chaos artifact OK')"

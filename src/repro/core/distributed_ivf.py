@@ -122,6 +122,10 @@ class ShardRetryReport:
     skipped_shards: list = dataclasses.field(default_factory=list)
     lost_clusters: int = 0             # clusters owned by skipped shards
     backoff_ms: float = 0.0            # cumulative backoff slept
+    budget_ms: float = float("inf")    # per-query total-backoff budget
+    budget_exhausted: bool = False     # the budget ran dry this query
+    budget_skips: int = 0              # shards skipped WITHOUT waiting
+    #                                    out retries once it ran dry
 
 
 @functools.partial(jax.jit, static_argnames=("k", "n_local", "list_pad"))
@@ -150,7 +154,8 @@ def _shard_local_topk(centroids, docs, doc_ids, offsets, sizes, queries,
 
 
 def search_with_retry(sharded: ShardedIVF, queries, *, k: int,
-                      n_probe: int, retry=None, fault=None, sleep=None
+                      n_probe: int, retry=None, fault=None, sleep=None,
+                      rng=None
                       ) -> Tuple[np.ndarray, np.ndarray,
                                  ShardRetryReport]:
     """Fan a query batch over IVF shards with per-shard retry + skip.
@@ -158,12 +163,21 @@ def search_with_retry(sharded: ShardedIVF, queries, *, k: int,
     The real-data-plane promotion of the ``runtime.straggler``
     simulation: each shard scans its top-``ceil(n_probe/S)`` local
     clusters; a shard whose dispatch raises :class:`ShardFault` (or
-    ``TimeoutError``) is retried with the exponential backoff of
+    ``TimeoutError``) is retried with the backoff schedule of
     ``retry`` (a ``repro.runtime.straggler.RetryPolicy``) and, after
     ``max_retries``, skipped — its clusters drop out of the candidate
     set and the loss is recorded in the returned
     :class:`ShardRetryReport` — so the wave *degrades* rather than
     dies.
+
+    With ``retry.jitter="decorrelated"`` each backoff is a jittered
+    draw (de-synchronising retry storms across concurrent queries);
+    ``rng`` seeds it (``np.random.Generator``, defaults to a fixed
+    seed for reproducibility).  ``retry.budget_ms`` caps the TOTAL
+    backoff this query may sleep across all shards: once spent, a
+    faulting shard is skipped immediately (``budget_skips``) instead
+    of waiting out its remaining retries, so a multi-shard outage
+    costs bounded latency.
 
     ``fault(shard, attempt)`` is the injection hook (chaos harness);
     ``sleep(ms)`` is injectable so tests and simulations don't block.
@@ -174,17 +188,30 @@ def search_with_retry(sharded: ShardedIVF, queries, *, k: int,
     retry = retry or RetryPolicy()
     sleep = sleep if sleep is not None \
         else (lambda ms: _time.sleep(ms / 1000.0))
+    if rng is None:
+        rng = np.random.default_rng(0)
     q = jnp.asarray(queries, jnp.float32)
     n_local = -(-n_probe // sharded.n_shards)
-    report = ShardRetryReport()
+    report = ShardRetryReport(budget_ms=retry.budget_ms)
     parts_s, parts_i = [], []
     for s in range(sharded.n_shards):
         got = None
+        prev_ms = 0.0
         for attempt in range(retry.max_retries + 1):
+            if attempt > 0 and report.budget_exhausted:
+                # budget ran dry: degrade to skip-shard NOW rather
+                # than sleeping out the remaining retries
+                report.budget_skips += 1
+                break
             report.attempts += 1
             if attempt > 0:
                 report.retries += 1
-                ms = retry.backoff_ms(attempt - 1)
+                ms = retry.next_backoff(attempt - 1, prev_ms, rng)
+                remaining = retry.budget_ms - report.backoff_ms
+                if ms >= remaining:
+                    ms = max(remaining, 0.0)
+                    report.budget_exhausted = True
+                prev_ms = ms
                 report.backoff_ms += ms
                 sleep(ms)
             try:

@@ -81,6 +81,32 @@ def kmeans(x: np.ndarray, n_clusters: int, *, n_iters: int = 10,
     return np.asarray(centroids), np.asarray(assign)
 
 
+def retrain(x: np.ndarray, centroids: np.ndarray, *, n_iters: int = 4,
+            block: int = 4096) -> Tuple[np.ndarray, np.ndarray]:
+    """Warm-start Lloyd re-fit for background re-clustering.
+
+    Starts from the serving centroids (already near the corpus modes,
+    so a few iterations suffice) and keeps the cluster COUNT fixed —
+    no ``split_oversized`` — so the rebuilt index keeps its compiled
+    search shapes; entries overflowing ``list_pad`` under the new
+    assignment spill into the rebuild candidate's delta buffer exactly
+    like ``merge_delta`` spill-back.  Deterministic: same (corpus,
+    centroids, n_iters) always yields the same result, which is what
+    lets the rebuild chaos drill demand bit-identical recovery.
+
+    Returns ``(new_centroids, assign)`` as host arrays.  An empty
+    corpus returns the input centroids unchanged.
+    """
+    centroids = np.asarray(centroids, np.float32)
+    x = np.asarray(x, np.float32)
+    if x.shape[0] == 0:
+        return centroids.copy(), np.zeros(0, np.int32)
+    new, assign = kmeans_fit(jnp.asarray(x), jnp.asarray(centroids),
+                             n_clusters=centroids.shape[0],
+                             n_iters=n_iters, block=block)
+    return np.asarray(new), np.asarray(assign)
+
+
 def sharded_assign_step(mesh, data_axis: str = "data"):
     """shard_map'd assignment+partial-stats step for corpus-scale k-means.
 

@@ -152,6 +152,9 @@ class DegradationLadder:
     cap_at: float = 1.5          # remaining < 1.5 wave costs -> rung 2
     force_at: float = 0.0        # remaining <= 0 wave costs -> rung 3
     tight_delta: int = 1         # patience delta while on rung >= 1
+    rebuild_pause_at: float = 4.0  # pause background rebuild ticks when
+    #                                any lane's remaining budget drops
+    #                                below this many wave costs
 
     def __post_init__(self):
         if not (self.force_at <= self.cap_at <= self.tighten_at):
@@ -169,6 +172,24 @@ class DegradationLadder:
         out[r < self.cap_at] = RUNG_CAP
         out[r <= self.force_at] = RUNG_FORCE
         return out
+
+    def throttle_rebuild(self, remaining_ms: np.ndarray,
+                         wave_cost_ms: float) -> bool:
+        """Should background rebuild work pause this wave?
+
+        True when ANY active lane's remaining deadline budget is below
+        ``rebuild_pause_at`` wave costs: a retrain/re-layout stage
+        stalls the serving thread for roughly a wave's worth of work,
+        so it must not run while a lane is close enough to its
+        deadline that the stall would push it onto a degradation rung.
+        An empty ``remaining_ms`` (no active lanes, or no deadline)
+        never throttles.
+        """
+        r = np.asarray(remaining_ms, np.float64)
+        if r.size == 0:
+            return False
+        return bool((r / max(wave_cost_ms, 1e-9)
+                     < self.rebuild_pause_at).any())
 
 
 # -- step -------------------------------------------------------------------

@@ -215,6 +215,11 @@ class ServeReport:
     latency_ms: Dict[int, float] = dataclasses.field(default_factory=dict)
     deadline_ms: Optional[float] = None
     wave_cost_ms: float = 0.0   # final EMA of per-wave cost
+    # -- background rebuild accounting (zero without a rebuilder) --
+    epoch_swaps: int = 0        # higher-epoch versions adopted (drained)
+    drain_waves: int = 0        # waves spent draining before a swap
+    rebuild_ticks: int = 0      # rebuild stages run between waves
+    rebuild_throttled: int = 0  # ticks skipped under deadline pressure
 
     @property
     def degraded_fraction(self) -> float:
@@ -236,6 +241,23 @@ class WaveScheduler:
     under mutation, so each lane's cluster_rank stays valid), and the
     per-wave tombstone scrub evicts results deleted after they were
     merged.
+
+    **Epoch-fenced swaps** (background re-clustering,
+    ``repro.index.rebuild``): a version whose ``epoch`` is HIGHER than
+    the one lanes are probing carries re-trained centroids, so every
+    in-flight ``cluster_rank`` would be meaningless against it.  The
+    scheduler therefore *drains*: it pins the old version, stops
+    admitting, finishes in-flight lanes against the pinned epoch
+    (their results are correct for the corpus they were admitted
+    under — mutation catch-up means no document is missing), and
+    adopts the new epoch only once no lane is active.  Same-epoch
+    version swaps (``merge_delta``) keep the old wave-granular
+    behavior.
+
+    ``rebuilder`` (optional, ``repro.index.rebuild.Rebuilder``): when
+    armed, the scheduler runs ONE rebuild pipeline stage between waves
+    — unless the degradation ladder's ``throttle_rebuild`` says a lane
+    is too close to its deadline to absorb the stall.
     """
 
     def __init__(self, index: IVFIndex, *, wave_size: int = 64,
@@ -244,7 +266,8 @@ class WaveScheduler:
                  use_fused: bool = True, registry=None,
                  deadline_ms: Optional[float] = None,
                  ladder: Optional[DegradationLadder] = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 rebuilder=None):
         """``deadline_ms``: per-query latency budget, counted from lane
         admission.  When set, the scheduler walks the
         :class:`repro.core.policies.DegradationLadder` instead of
@@ -270,12 +293,47 @@ class WaveScheduler:
         self.deadline_ms = deadline_ms
         self.ladder = ladder or DegradationLadder()
         self._now = clock or (lambda: time.monotonic() * 1000.0)
+        self.rebuilder = rebuilder
+        self._pinned = None        # version lanes are probing against
+
+    def _refresh_pin(self, active_any: bool) -> Tuple[bool, bool]:
+        """Adopt the registry's current version if lanes allow it.
+
+        Same-epoch updates (merge_delta) adopt immediately — the
+        wave-granular swap that mid-flight lanes tolerate.  A
+        higher-epoch version (rebuild: new centroids) only lands once
+        no lane is active; until then the scheduler reports *drain*
+        and the caller stops admitting.  Returns ``(draining,
+        swapped)``.
+        """
+        if self.registry is None:
+            return False, False
+        cur = self.registry.current()
+        if self._pinned is None:
+            self._pinned = cur
+            return False, False
+        cur_epoch = getattr(cur, "epoch", 0)
+        pin_epoch = getattr(self._pinned, "epoch", 0)
+        if cur_epoch == pin_epoch:
+            self._pinned = cur
+            return False, False
+        if active_any:
+            return True, False     # drain: finish lanes on old epoch
+        self._pinned = cur
+        return False, True
 
     def _version(self):
         if self.registry is None:
             return self.index, None, None
-        ver = self.registry.current()
+        ver = self._pinned if self._pinned is not None \
+            else self.registry.current()
         return ver.index, ver.delta, ver.dead
+
+    def _centroids(self):
+        """Centroids new admissions rank clusters against — must match
+        the epoch their lanes will probe."""
+        ix, _, _ = self._version()
+        return ix.centroids
 
     @staticmethod
     def _flag(degraded: Dict[int, str], qid: int, reason: str) -> None:
@@ -302,6 +360,10 @@ class WaveScheduler:
         full_delta = jnp.full((self.w,), self.delta, jnp.int32)
         full_cap = jnp.full((self.w,), self.n, jnp.int32)
         wave_cost = 0.0                              # EMA of wave ms
+        epoch_swaps = drain_waves = 0
+        rebuild_ticks = rebuild_throttled = 0
+        self._pinned = None if self.registry is None \
+            else self.registry.current()
         while True:
             active = np.asarray(state.active)
             qids = np.asarray(state.qid)
@@ -312,6 +374,12 @@ class WaveScheduler:
                 results[qid] = np.asarray(state.topk_ids)[lane]
                 probes[qid] = int(np.asarray(state.h)[lane])
                 latency[qid] = now - lane_admit[lane]
+            # -- epoch-fenced version adoption ------------------------------
+            draining, swapped = self._refresh_pin(bool(active.any()))
+            if swapped:
+                epoch_swaps += 1
+            if draining:
+                drain_waves += 1
             # -- degradation ladder (deadline-budgeted serving) -------------
             lane_delta, lane_cap = full_delta, full_cap
             if self.deadline_ms is not None:
@@ -350,7 +418,7 @@ class WaveScheduler:
                     lane_delta = jnp.asarray(delta_np)
                     lane_cap = jnp.asarray(cap_np)
             # -- admission (with overload shedding) -------------------------
-            if compact or not active.any():
+            if (compact or not active.any()) and not draining:
                 if next_q < nq and (~active).any():
                     room = int((~active).sum())
                     if self.deadline_ms is not None \
@@ -370,7 +438,7 @@ class WaveScheduler:
                                         next_q + batch.shape[0],
                                         dtype=np.int32)
                         before = active
-                        state = _admit(state, self.index.centroids,
+                        state = _admit(state, self._centroids(),
                                        jnp.asarray(batch),
                                        jnp.asarray(ids), self.n)
                         next_q += batch.shape[0]
@@ -394,9 +462,29 @@ class WaveScheduler:
             sample = self._now() - now
             wave_cost = sample if waves == 1 \
                 else 0.5 * wave_cost + 0.5 * sample
+            # -- background rebuild tick (throttled under pressure) ---------
+            # after the wave-cost sample so the stall never inflates
+            # the EMA the ladder budgets against
+            if self.rebuilder is not None and self.rebuilder.active:
+                throttle = False
+                if self.deadline_ms is not None:
+                    act_now = np.asarray(state.active)
+                    rem = (self.deadline_ms
+                           - (self._now() - lane_admit))[act_now]
+                    throttle = self.ladder.throttle_rebuild(
+                        rem, max(wave_cost, 1e-9))
+                if throttle:
+                    rebuild_throttled += 1
+                else:
+                    self.rebuilder.tick()
+                    rebuild_ticks += 1
         return ServeReport(results, probes, waves,
                            float(np.mean(occ)) if occ else 0.0,
                            lane_steps, degraded=degraded,
                            latency_ms=latency,
                            deadline_ms=self.deadline_ms,
-                           wave_cost_ms=wave_cost)
+                           wave_cost_ms=wave_cost,
+                           epoch_swaps=epoch_swaps,
+                           drain_waves=drain_waves,
+                           rebuild_ticks=rebuild_ticks,
+                           rebuild_throttled=rebuild_throttled)

@@ -1,9 +1,15 @@
 """Live index mutation: delta buffer, tombstones, versioned snapshots,
-and the crash-safety pair (mutation WAL + snapshot recovery)."""
+the crash-safety pair (mutation WAL + snapshot recovery), and the
+background re-clustering pipeline (two-phase rebuild publish)."""
 from repro.core.ivf import DeltaView
 from repro.index.delta import (DeltaBuffer, DeltaFull, Tombstones,
                                assign_clusters)
 from repro.index.live import LiveIndex, relayout
-from repro.index.registry import IndexRegistry, IndexVersion, version_of
-from repro.index.wal import (MutationWAL, ReplayReport, WALCorruptError,
-                             WALRecord)
+from repro.index.rebuild import (DriftTracker, RebuildCrash, Rebuilder,
+                                 RebuildReport, resolve_pending_rebuild)
+from repro.index.registry import (IndexRegistry, IndexVersion,
+                                  StaleEpochError, version_of)
+from repro.index.wal import (EPOCH_OPS, MUTATION_OPS, MutationWAL,
+                             OP_REBUILD_ABORT, OP_REBUILD_BEGIN,
+                             OP_REBUILD_COMMIT, ReplayReport,
+                             WALCorruptError, WALRecord)

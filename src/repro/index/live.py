@@ -18,9 +18,11 @@ view)``.  The key invariant (tested): the overlay view returns
 bit-identical top-k, probe counts and phi history to a freshly
 rebuilt index holding the net corpus, for every exit policy, on both
 the per-probe and fused kernel paths.  Centroids never change under
-mutation (only a full offline rebuild retrains them), which is what
-keeps probe order — and mid-flight lane state — valid across
-``merge_delta`` version swaps.
+mutation within an *epoch* (``merge_delta`` keeps them fixed), which
+is what keeps probe order — and mid-flight lane state — valid across
+``merge_delta`` version swaps.  Only a background re-clustering
+(``repro.index.rebuild``) retrains them, bumping ``epoch`` so readers
+drain in-flight lanes before adopting the new centroid generation.
 """
 from __future__ import annotations
 
@@ -113,6 +115,7 @@ class LiveIndex:
         self.tombs = Tombstones(self.next_id)
         self.version = 0                 # bumped by merge_delta
         self.seq = 0                     # bumped by every mutation
+        self.epoch = 0                   # bumped by a rebuild publish
         self.wal = wal
         self._replaying = False
 
@@ -150,6 +153,7 @@ class LiveIndex:
         self.version = int(getattr(ver, "merges", 0))
         self.seq = int(ver.seq) if getattr(ver, "seq", -1) >= 0 \
             else int(ver.version)
+        self.epoch = int(getattr(ver, "epoch", 0))
         self.wal = wal
         self._replaying = False
         return self

@@ -28,6 +28,18 @@ _SNAPSHOT_KEYS = ("centroids", "docs", "doc_ids", "offsets", "sizes",
                   "dvecs", "dids", "dassign", "dead", "meta")
 
 
+class StaleEpochError(RuntimeError):
+    """A publish carried an epoch older than the registry's current one.
+
+    Raised when a ``merge_delta`` (or any publisher) computed against a
+    pre-rebuild index races a background rebuild's epoch-bumped
+    publish: the stale version must NOT clobber the re-clustered one.
+    The loser re-reads ``registry.current()`` and redoes its work
+    against the new epoch (its mutations are safe — they are in the
+    WAL and were replayed onto the rebuild candidate during catch-up).
+    """
+
+
 @dataclass(frozen=True)
 class IndexVersion:
     """One immutable, publishable snapshot of the live index."""
@@ -38,6 +50,7 @@ class IndexVersion:
     next_id: int
     seq: int = -1              # LiveIndex mutation counter at snapshot
     merges: int = 0            # LiveIndex merge counter at snapshot
+    epoch: int = 0             # centroid generation (bumped by rebuild)
 
 
 def version_of(live, *, version: Optional[int] = None) -> IndexVersion:
@@ -49,7 +62,8 @@ def version_of(live, *, version: Optional[int] = None) -> IndexVersion:
         dead=live.dead_lookup(),
         next_id=live.next_id,
         seq=live.seq,
-        merges=live.version)
+        merges=live.version,
+        epoch=int(getattr(live, "epoch", 0)))
 
 
 class IndexRegistry:
@@ -65,10 +79,18 @@ class IndexRegistry:
     def publish(self, ver: IndexVersion) -> IndexVersion:
         with self._lock:
             if self._current is not None and \
+                    ver.epoch < self._current.epoch:
+                raise StaleEpochError(
+                    f"publish of version {ver.version} carries epoch "
+                    f"{ver.epoch} but the registry is at epoch "
+                    f"{self._current.epoch} — a background rebuild "
+                    f"published first; re-read current() and redo the "
+                    f"mutation against the new index")
+            if self._current is not None and \
                     ver.version <= self._current.version:
                 ver = IndexVersion(self._current.version + 1, ver.index,
                                    ver.delta, ver.dead, ver.next_id,
-                                   ver.seq, ver.merges)
+                                   ver.seq, ver.merges, ver.epoch)
             self._current = ver
             self.swaps += 1
             return ver
@@ -92,7 +114,7 @@ class IndexRegistry:
             "dassign": ver.delta.assign, "dead": ver.dead,
             "meta": np.asarray(
                 [ix.list_pad, ver.version, ver.next_id, ver.seq,
-                 ver.merges], np.int64),
+                 ver.merges, ver.epoch], np.int64),
         }
         return manager.save(ver.version, tree)
 
@@ -117,6 +139,7 @@ class IndexRegistry:
         list_pad, version, next_id = (int(x) for x in meta[:3])
         seq = int(meta[3]) if meta.size > 3 else version
         merges = int(meta[4]) if meta.size > 4 else 0
+        epoch = int(meta[5]) if meta.size > 5 else 0
         ver = IndexVersion(
             version=version,
             index=IVFIndex(jnp.asarray(arrs["centroids"]),
@@ -130,7 +153,8 @@ class IndexRegistry:
             dead=jnp.asarray(arrs["dead"]),
             next_id=next_id,
             seq=seq,
-            merges=merges)
+            merges=merges,
+            epoch=epoch)
         return IndexRegistry(ver), ver
 
     @staticmethod
@@ -143,12 +167,29 @@ class IndexRegistry:
         φ history, probe counts) to the instance that crashed, and the
         registry holds its freshly published current version.
         ``replay_report`` is None when no WAL is given.
+
+        If the WAL shows a background rebuild in flight at crash time,
+        the two-phase protocol is resolved first: a durable
+        ``REBUILD_COMMIT`` whose staged snapshot was not yet promoted
+        gets its promote redone (the commit record *is* the publish);
+        an open epoch (``BEGIN`` without ``COMMIT``/``ABORT``) is
+        aborted and its staging cleaned, so recovery lands on the
+        pre-rebuild snapshot + full replay — bit-identical either way.
         """
         from repro.index.live import LiveIndex
+        from repro.index.rebuild import resolve_pending_rebuild
+        promoted = aborted = False
+        if wal is not None:
+            promoted, aborted = resolve_pending_rebuild(manager, wal)
         _, ver = IndexRegistry.restore(manager, step)
         live = LiveIndex.from_version(ver, align=align,
                                       round_total_to=round_total_to,
                                       wal=wal)
+        if wal is not None:
+            wal.note_durable(live.seq)   # restored snapshot is durable
         report = wal.replay_into(live) if wal is not None else None
+        if report is not None:
+            report.rebuild_promoted = promoted
+            report.rebuild_aborted = aborted
         reg = IndexRegistry(version_of(live))
         return reg, live, report

@@ -23,6 +23,21 @@ On-disk format (little-endian, append-only):
 A crash mid-append leaves a truncated final record: replay drops the
 torn tail and reports it.  A bad magic/CRC *before* the tail means real
 corruption and raises :class:`WALCorruptError` with the file offset.
+
+Epoch records (background re-clustering, ``repro.index.rebuild``): a
+rebuild brackets itself in the log with ``REBUILD_BEGIN`` /
+``REBUILD_COMMIT`` / ``REBUILD_ABORT`` records (payload: i64
+``[epoch, seq]``).  They are *fences*, not mutations — replay skips
+them — but they drive two guarantees:
+
+* ``REBUILD_COMMIT`` is the atomic publish point of the two-phase
+  rebuild: the staged candidate snapshot becomes the recovery base the
+  instant the commit record is durable (``IndexRegistry.recover``
+  redoes the promote if the crash hit between commit and rename).
+* An *open* epoch (``BEGIN`` without ``COMMIT``/``ABORT``) pins every
+  record newer than its fence sequence: ``truncate_upto`` refuses to
+  compact past it, so the catch-up replay that the rebuild needs can
+  never lose records to a concurrent compaction.
 """
 from __future__ import annotations
 
@@ -40,7 +55,14 @@ _REC_MAGIC = b"\xa5Z"
 _HDR = struct.Struct("<2sBQII")          # magic, op, seq, len, crc
 
 OP_ADD, OP_DELETE, OP_MERGE = 1, 2, 3
-_OP_NAMES = {OP_ADD: "add", OP_DELETE: "delete", OP_MERGE: "merge"}
+OP_REBUILD_BEGIN, OP_REBUILD_COMMIT, OP_REBUILD_ABORT = 4, 5, 6
+_OP_NAMES = {OP_ADD: "add", OP_DELETE: "delete", OP_MERGE: "merge",
+             OP_REBUILD_BEGIN: "rebuild_begin",
+             OP_REBUILD_COMMIT: "rebuild_commit",
+             OP_REBUILD_ABORT: "rebuild_abort"}
+#: ops that mutate index state (replayed); the rest are epoch fences
+MUTATION_OPS = (OP_ADD, OP_DELETE, OP_MERGE)
+EPOCH_OPS = (OP_REBUILD_BEGIN, OP_REBUILD_COMMIT, OP_REBUILD_ABORT)
 
 
 class WALCorruptError(RuntimeError):
@@ -57,6 +79,14 @@ class WALRecord:
     def op_name(self) -> str:
         return _OP_NAMES[self.op]
 
+    @property
+    def epoch(self) -> Optional[int]:
+        """Epoch number carried by a rebuild fence record (else None)."""
+        if self.op in EPOCH_OPS and self.payload is not None \
+                and self.payload.size:
+            return int(np.asarray(self.payload).ravel()[0])
+        return None
+
 
 @dataclass
 class ReplayReport:
@@ -64,6 +94,9 @@ class ReplayReport:
     skipped: int = 0
     torn_tail: bool = False
     last_seq: int = 0
+    epoch_records: int = 0               # rebuild fences seen (not applied)
+    rebuild_promoted: bool = False       # recover redid a commit's promote
+    rebuild_aborted: bool = False        # recover aborted an open rebuild
 
 
 def _encode_payload(arr: Optional[np.ndarray]) -> bytes:
@@ -112,6 +145,7 @@ class MutationWAL:
         self._group_t0: Optional[float] = None
         self.fsyncs = 0              # accounting (tests/benchmarks)
         self.last_scan_torn = False
+        self._durable_seq: Optional[int] = None   # see note_durable()
         size = os.path.getsize(path) if os.path.exists(path) else -1
         if 0 < size < len(FILE_MAGIC):
             # crash during creation: no record can fit, safe to reset
@@ -165,6 +199,17 @@ class MutationWAL:
             self._sync()
         else:
             self._f.flush()
+
+    def note_durable(self, seq: int) -> None:
+        """Record that a snapshot covering every record with sequence
+        ``<= seq`` is durable on disk.  ``truncate_upto`` clamps its
+        cut to this fence, so a caller passing a too-new sequence (a
+        compaction racing a snapshot, or running mid-recovery) can
+        never drop records that replay still needs.  Callers invoke it
+        after ``IndexRegistry.save`` lands; ``recover`` sets it from
+        the snapshot it restored."""
+        if self._durable_seq is None or seq > self._durable_seq:
+            self._durable_seq = int(seq)
 
     def close(self) -> None:
         if not self._f.closed:
@@ -234,6 +279,9 @@ class MutationWAL:
         live._replaying = True
         try:
             for rec in records:
+                if rec.op not in MUTATION_OPS:
+                    rep.epoch_records += 1    # rebuild fence, not a mutation
+                    continue
                 if rec.seq <= live.seq:
                     rep.skipped += 1
                     continue
@@ -255,12 +303,50 @@ class MutationWAL:
         return rep
 
     # -- maintenance ---------------------------------------------------------
+    def open_epoch_fences(self, records=None) -> List[int]:
+        """Fence sequences of rebuilds that are in flight (a
+        ``REBUILD_BEGIN`` with no matching ``COMMIT``/``ABORT``)."""
+        begun, closed = {}, set()
+        for r in (self.scan() if records is None else records):
+            if r.op == OP_REBUILD_BEGIN:
+                pl = np.asarray(r.payload).ravel()
+                begun[int(pl[0])] = int(pl[1]) if pl.size > 1 else r.seq
+            elif r.op in (OP_REBUILD_COMMIT, OP_REBUILD_ABORT):
+                closed.add(r.epoch)
+        return [f for e, f in begun.items() if e not in closed]
+
     def truncate_upto(self, seq: int) -> int:
         """Drop records with ``seq <=`` the given snapshot sequence
         (log compaction after a successful snapshot).  Returns the
-        number of records kept.  Atomic: rewrite + rename."""
+        number of records kept.  Atomic: rewrite + rename.
+
+        Guarded: the cut is clamped to (a) the last sequence reported
+        durable via :meth:`note_durable` and (b) the fence of any open
+        rebuild epoch, so compaction can never drop a record that
+        snapshot recovery or an in-flight rebuild's catch-up replay
+        still needs — even when the caller passes a sequence from the
+        future (e.g. a compaction interleaved with recovery).  Fence
+        records of open epochs are always kept; fences of resolved
+        epochs compact away with the mutations they bracket."""
         self.flush()                     # batch must land before rewrite
-        keep = [r for r in self.scan() if r.seq > seq]
+        records = self.scan()
+        cut = int(seq)
+        if self._durable_seq is not None:
+            cut = min(cut, self._durable_seq)
+        fences = self.open_epoch_fences(records)
+        if fences:
+            cut = min(cut, min(fences))
+        open_epochs = set()
+        begun, closed = set(), set()
+        for r in records:
+            if r.op == OP_REBUILD_BEGIN:
+                begun.add(r.epoch)
+            elif r.op in (OP_REBUILD_COMMIT, OP_REBUILD_ABORT):
+                closed.add(r.epoch)
+        open_epochs = begun - closed
+        keep = [r for r in records
+                if r.seq > cut
+                or (r.op in EPOCH_OPS and r.epoch in open_epochs)]
         tmp = self.path + ".tmp"
         with open(tmp, "wb") as f:
             f.write(FILE_MAGIC)

@@ -13,6 +13,15 @@ into a fresh immutable index version every M waves.  The driver then
 reports live-vs-static recall so regressions in the overlay path are
 visible at the CLI.
 
+Background re-clustering (``repro.index.rebuild``):
+``--rebuild-every N`` requests a crash-safe centroid rebuild every N
+waves; ``--rebuild-drift R`` instead arms a :class:`DriftTracker`
+that requests one when added docs drift R× off the build-time
+baseline.  Rebuild stages interleave with serving waves (throttled
+under deadline pressure) and the swap is epoch-fenced: in-flight
+lanes drain on the pinned version before the scheduler adopts the
+re-clustered index.
+
 Chaos mode (``repro.runtime.chaos``): ``--chaos`` runs the seeded
 resilience drills — crash + WAL recovery over a mutation stream,
 recall-vs-deadline curve under latency spikes, and shard-fault
@@ -73,6 +82,16 @@ def main() -> None:
                          "version every N waves")
     ap.add_argument("--delta-cap", type=int, default=4096,
                     help="delta buffer capacity (slots)")
+    ap.add_argument("--rebuild-every", type=int, default=0,
+                    help="request a background centroid rebuild every "
+                         "N waves of the live stream (0 = off); stages "
+                         "interleave with serving waves and the swap "
+                         "is epoch-fenced")
+    ap.add_argument("--rebuild-drift", type=float, default=0.0,
+                    help="drift-ratio threshold that triggers a "
+                         "rebuild (0 = off): mean nearest-centroid "
+                         "distance of added docs vs the build-time "
+                         "baseline")
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-query latency budget; under pressure the "
                          "scheduler walks the degradation ladder "
@@ -154,11 +173,42 @@ def main() -> None:
         return
 
     # --- mixed query/mutation stream over the live index ------------------
-    live = LiveIndex(index, delta_cap=args.delta_cap)
+    rebuild_on = args.rebuild_every > 0 or args.rebuild_drift > 0
+    rebuilder = tracker = rb_tmp = None
+    if rebuild_on:
+        # a durable rebuild needs a WAL (catch-up across stages) and a
+        # snapshot root (two-phase publish); both are scratch here
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.index import DriftTracker, MutationWAL, Rebuilder
+        rb_tmp = tempfile.TemporaryDirectory(prefix="serve_rebuild_")
+        wal = MutationWAL(os.path.join(rb_tmp.name, "mutations.wal"),
+                          group_commit_n=8, group_commit_ms=50.0)
+        live = LiveIndex(index, delta_cap=args.delta_cap, wal=wal)
+        mgr = CheckpointManager(os.path.join(rb_tmp.name, "snapshots"),
+                                async_save=False)
+    else:
+        live = LiveIndex(index, delta_cap=args.delta_cap)
+        mgr = None
     reg = IndexRegistry(version_of(live))
+    if rebuild_on:
+        reg.save(mgr)
+        live.wal.note_durable(live.seq)
+
+        def on_publish(new_live, report):
+            nonlocal live
+            live = new_live          # rebind the mutation stream
+            if tracker is not None:
+                tracker.rebase(new_live._centroids)
+
+        rebuilder = Rebuilder(live, reg, mgr, on_publish=on_publish)
+        if args.rebuild_drift > 0:
+            tracker = DriftTracker(live._centroids, c.docs,
+                                   threshold=args.rebuild_drift)
     ws_live = WaveScheduler(index, wave_size=args.wave_size, chunk=4,
                             k=args.k, n_probe=args.n_probe,
-                            delta=args.delta, phi=args.phi, registry=reg)
+                            delta=args.delta, phi=args.phi, registry=reg,
+                            deadline_ms=args.deadline_ms,
+                            rebuilder=rebuilder)
     rng = np.random.default_rng(1)
     added: list[int] = []
     stats = {"adds": 0, "deletes": 0, "merges": 0}
@@ -174,6 +224,8 @@ def main() -> None:
         try:
             added.extend(int(i) for i in live.add(new))
             stats["adds"] += args.mutation_rate
+            if tracker is not None:
+                tracker.observe(new)
         except DeltaFull:
             live.merge_delta()
             stats["merges"] += 1
@@ -188,12 +240,17 @@ def main() -> None:
             live.merge_delta()
             stats["merges"] += 1
         reg.publish(version_of(live))
+        if rebuilder is not None and not rebuilder.active:
+            if args.rebuild_every and wave % args.rebuild_every == 0:
+                rebuilder.request(f"every-{args.rebuild_every}")
+            elif tracker is not None and tracker.triggered:
+                rebuilder.request(f"drift>{args.rebuild_drift}")
 
     rep_l, ids_l, probes_l, wall_l = _serve(
         ws_live, c.queries, compact=not args.no_compact, on_wave=mutate)
     r_static = metrics.r_star_at_k(ids, exact)
     r_live = metrics.r_star_at_k(ids_l, exact)
-    print({"mode": "live", "mutation_rate": args.mutation_rate,
+    row = {"mode": "live", "mutation_rate": args.mutation_rate,
            "merge_every": args.merge_every, **stats,
            "versions": live.version, "swaps": reg.swaps,
            "delta_occupancy": round(live.delta.occupancy(), 3),
@@ -201,7 +258,20 @@ def main() -> None:
            "recall_live": round(r_live, 4),
            "recall_gap": round(abs(r_static - r_live), 4),
            "latency_ms": round(wall_l, 1),
-           "mean_probes": round(float(probes_l.mean()), 2)})
+           "mean_probes": round(float(probes_l.mean()), 2)}
+    if rebuilder is not None:
+        row.update({"rebuilds": rebuilder.epochs_published,
+                    "epoch": live.epoch,
+                    "epoch_swaps": rep_l.epoch_swaps,
+                    "drain_waves": rep_l.drain_waves,
+                    "rebuild_ticks": rep_l.rebuild_ticks,
+                    "rebuild_throttled": rep_l.rebuild_throttled})
+        if tracker is not None:
+            row["drift_ratio"] = round(tracker.ratio, 3)
+    print(row)
+    if rb_tmp is not None:
+        live.wal.close()
+        rb_tmp.cleanup()
 
 
 if __name__ == "__main__":

@@ -290,12 +290,275 @@ def run_shard_drill(index, queries: np.ndarray, exact_ids: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# drill 4: background rebuild — crash boundaries, swap race, drift repair
+# ---------------------------------------------------------------------------
+
+def _search_identical(a_live, b_live, queries, *, k: int,
+                      n_probe: int) -> bool:
+    """Bit-identity of two LiveIndexes on per-probe AND fused paths."""
+    from repro.core import policies
+    q = jnp.asarray(queries)
+    pol = policies.patience(n_probe, delta=2, phi=90.0, k=k, tau=3)
+    same = True
+    for kw in ({}, {"use_fused_kernel": True, "chunk": 4}):
+        a = a_live.search(q, pol, **kw)
+        b = b_live.search(q, pol, **kw)
+        same &= bool(
+            np.array_equal(np.asarray(a.topk_ids),
+                           np.asarray(b.topk_ids))
+            and np.array_equal(np.asarray(a.probes),
+                               np.asarray(b.probes))
+            and np.allclose(np.asarray(a.phi_hist),
+                            np.asarray(b.phi_hist), atol=1e-4))
+    return same
+
+
+def _drive_rebuild(index, docs, cfg: ChaosConfig, workdir: str, tag: str,
+                   failpoint: Optional[str]):
+    """One scripted rebuild run: pre-mutations -> begin -> mid
+    mutations -> retrain/layout/catchup -> late mutations + a racing
+    ``merge_delta`` -> publish, crashing at ``failpoint`` (None = run
+    to completion).  The schedule is deterministic, so a crashed run
+    and its oracle (same schedule, no failpoint) see identical WAL
+    streams up to the crash boundary.  Returns
+    ``(wal, rebuilder, live, manager, registry, crashed_stage)``.
+    """
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.index import (IndexRegistry, LiveIndex, MutationWAL,
+                             RebuildCrash, Rebuilder, version_of)
+
+    wdir = os.path.join(workdir, f"rebuild_{tag}")
+    os.makedirs(wdir, exist_ok=True)
+    wal = MutationWAL(os.path.join(wdir, "mutations.wal"),
+                      group_commit_n=8, group_commit_ms=50.0)
+    live = LiveIndex(index, delta_cap=4096, wal=wal)
+    mgr = CheckpointManager(os.path.join(wdir, "snapshots"),
+                            async_save=False, keep=2)
+    reg = IndexRegistry(version_of(live))
+    reg.save(mgr)
+    wal.note_durable(live.seq)
+
+    rng = np.random.default_rng(cfg.seed + 11)
+
+    def batch(n):
+        src = rng.integers(0, docs.shape[0], n)
+        noise = rng.normal(scale=0.05, size=(n, docs.shape[1]))
+        return (docs[src] + noise).astype(np.float32)
+
+    added: List[int] = []
+    added.extend(int(i) for i in live.add(batch(cfg.adds_per_step)))
+    live.delete([added.pop(), added.pop()])
+    reg.publish(version_of(live))
+
+    rb = Rebuilder(live, reg, mgr, n_iters=3, failpoint=failpoint)
+    rb.request("chaos-drill")
+    crashed = None
+    try:
+        while rb.active:
+            stage = rb.tick()
+            # mutations land after specific stages: post-begin ones
+            # exercise the catch-up replay, post-catchup ones (plus a
+            # merge_delta computed against the OLD centroids, i.e. a
+            # merge racing the publish) exercise the publish-time
+            # late-gap close
+            if stage in ("begin", "catchup"):
+                added.extend(int(i)
+                             for i in live.add(batch(cfg.adds_per_step)))
+                live.delete([added.pop()])
+                if stage == "catchup":
+                    live.merge_delta()
+                reg.publish(version_of(live))
+    except RebuildCrash:
+        crashed = rb.stage
+    return wal, rb, live, mgr, reg, crashed
+
+
+def run_rebuild_drill(index, docs: np.ndarray, queries: np.ndarray,
+                      cfg: ChaosConfig, workdir: str, *, k: int = 10,
+                      n_probe: int = 16) -> Dict:
+    """Rebuild lifecycle drill: crash at every two-phase-publish
+    boundary (bit-identical recovery), epoch-fence a merge racing the
+    publish (no lost mutations, no stale clobber), and show the
+    drift-triggered rebuild restoring recall under sustained churn."""
+    from repro.index import IndexRegistry
+    from repro.index.rebuild import FAILPOINTS
+
+    out: Dict = {}
+
+    # -- 4a. crash at every rebuild boundary -------------------------------
+    #    pre-COMMIT crashes must recover to the no-rebuild state;
+    #    post-COMMIT crashes must recover to the post-rebuild state.
+    boundaries = []
+    for fp in FAILPOINTS:
+        wal, rb, live, mgr, reg, crashed = _drive_rebuild(
+            index, docs, cfg, workdir, f"crash_{fp}", fp)
+        t0 = time.monotonic()
+        _, recovered, rep = IndexRegistry.recover(mgr, wal)
+        rec_ms = (time.monotonic() - t0) * 1000.0
+        # a recovered epoch above the serving handle's means the crash
+        # landed after the COMMIT record — the rebuild happened
+        committed = recovered.epoch > live.epoch
+        if committed:
+            # oracle: the same scripted run, minus the crash (kmeans
+            # and the mutation schedule are deterministic)
+            _, orb, _, _, _, _ = _drive_rebuild(
+                index, docs, cfg, workdir, f"oracle_{fp}", None)
+            oracle = orb.live
+        else:
+            # recovery aborted the epoch, so it must land exactly on
+            # the no-rebuild state — which the in-memory serving
+            # handle still IS (only the Rebuilder crashed)
+            oracle = live
+        boundaries.append({
+            "failpoint": fp,
+            "crashed_stage": crashed,
+            "resolution": "committed" if committed else "aborted",
+            "promote_redone": bool(rep.rebuild_promoted),
+            "abort_appended": bool(rep.rebuild_aborted),
+            "recovered_epoch": int(recovered.epoch),
+            "replayed_records": int(rep.applied),
+            "recovery_ms": round(rec_ms, 2),
+            "bit_identical": _search_identical(
+                recovered, oracle, queries, k=k, n_probe=n_probe),
+        })
+        wal.close()
+    out["crash_boundaries"] = boundaries
+
+    # -- 4b. swap race: merge_delta vs rebuild publish ----------------------
+    #    the scripted run merges the stale handle's delta between the
+    #    catchup and publish ticks; the publish-stage late catch-up
+    #    must fold that racing merge into the candidate, and the stale
+    #    handle's own publish afterwards must be epoch-fenced.
+    from repro.index import StaleEpochError, version_of
+    wal, rb, live, mgr, reg, _ = _drive_rebuild(
+        index, docs, cfg, workdir, "race", None)
+    stale_ver = version_of(live)     # epoch 0, pre-rebuild centroids
+    try:
+        reg.publish(stale_ver)
+        fenced = False
+    except StaleEpochError:
+        fenced = True
+    cur = reg.current()
+    # no lost mutations: every id the stale handle knows is serving
+    new_ids = set(int(i) for i in rb.live.net_corpus()[1])
+    old_ids = set(int(i) for i in live.net_corpus()[1])
+    # crash right after the race: recovery must land on the rebuilt
+    # epoch, bit-identical to the post-publish serving state
+    _, recovered, _ = IndexRegistry.recover(mgr, wal)
+    out["swap_race"] = {
+        "fenced": fenced,
+        "stale_epoch": int(stale_ver.epoch),
+        "current_epoch": int(cur.epoch),
+        "lost_mutations": len(old_ids - new_ids),
+        "recovered_epoch": int(recovered.epoch),
+        "recovered_bit_identical": _search_identical(
+            recovered, rb.live, queries, k=k, n_probe=n_probe),
+    }
+    wal.close()
+
+    # -- 4c. drift: churn shifts the corpus off its centroids --------------
+    out["drift"] = run_drift_drill(cfg, k=k)
+    return out
+
+
+def run_drift_drill(cfg: ChaosConfig, *, k: int = 10, dim: int = 32,
+                    n_clusters: int = 32, eval_probes: int = 8) -> Dict:
+    """Sustained churn replaces the corpus with a blob mixture living
+    in the OTHER half of the embedding space; each new doc also
+    carries a small residual in the old half, so under FIXED centroids
+    the blobs scatter across stale clusters in an order that is pure
+    noise — a capped probe budget then finds only the few lists it
+    happens to rank first and recall collapses.  A drift-triggered
+    rebuild re-trains centroids onto the blobs, the probe ranking
+    becomes informative again, and the same budget restores recall.
+    Self-contained corpus (the geometry is the point), seeded by
+    ``cfg.seed``."""
+    from repro.core import metrics, policies
+    from repro.core.ivf import build_index
+    from repro.index import DriftTracker, LiveIndex, Rebuilder
+
+    half = dim // 2
+    rng = np.random.default_rng(cfg.seed + 23)
+    # original corpus lives in the FIRST half of the embedding space
+    base = np.zeros((2048, dim), np.float32)
+    base[:, :half] = rng.normal(size=(2048, half))
+    index = build_index(base, n_clusters=n_clusters, list_pad=256,
+                        seed=cfg.seed, align=64)
+    centers = rng.normal(scale=4.0, size=(8, half)).astype(np.float32)
+    doomed = rng.permutation(2048)
+
+    def blob_batch(rng, n=128):
+        which = rng.integers(0, 8, n)
+        out = np.zeros((n, dim), np.float32)
+        out[:, :half] = 0.3 * rng.normal(size=(n, half))
+        out[:, half:] = centers[which] + \
+            rng.normal(scale=0.3, size=(n, half))
+        return out
+
+    def churn(live, tracker=None, rebuilder=None):
+        rng = np.random.default_rng(cfg.seed + 29)
+        trigger_ratio = 0.0
+        for step in range(8):
+            add = blob_batch(rng)
+            live.add(add)
+            live.delete(doomed[step * 192: (step + 1) * 192])
+            live.merge_delta()
+            if tracker is not None:
+                tracker.observe(add)
+                # trigger once drift is persistent (EMA warmed up),
+                # late enough that the blob mass can anchor retrain
+                if step >= 3 and tracker.triggered \
+                        and rebuilder is not None \
+                        and not rebuilder.epochs_published:
+                    trigger_ratio = tracker.ratio
+                    rebuilder.live = live
+                    rebuilder.run_once("drift")
+                    live = rebuilder.live
+                    tracker.rebase(live._centroids)
+        return live, trigger_ratio
+
+    def eval_recall(live):
+        rng = np.random.default_rng(cfg.seed + 31)
+        q = np.zeros((64, dim), np.float32)
+        q[:, :half] = 0.3 * rng.normal(size=(64, half))
+        q[:, half:] = centers[rng.integers(0, 8, 64)] + \
+            rng.normal(scale=0.3, size=(64, half))
+        vecs, ids = live.net_corpus()
+        exact = ids[np.argsort(-(q @ vecs.T), axis=1)[:, :k]]
+        pol = policies.patience(min(eval_probes, n_clusters),
+                                delta=2, phi=90.0, k=k, tau=3)
+        res = live.search(jnp.asarray(q), pol)
+        return (metrics.r_star_at_k(np.asarray(res.topk_ids), exact),
+                float(np.mean(np.asarray(res.probes))))
+
+    fixed, _ = churn(LiveIndex(index, delta_cap=4096))
+    recall_fixed, probes_fixed = eval_recall(fixed)
+
+    live = LiveIndex(index, delta_cap=4096)
+    tracker = DriftTracker(live._centroids, base, ema=0.5, threshold=2.0)
+    rb = Rebuilder(live, n_iters=8)
+    rebuilt, trigger_ratio = churn(live, tracker, rb)
+    recall_rebuilt, probes_rebuilt = eval_recall(rebuilt)
+
+    return {
+        "trigger_ratio": round(trigger_ratio, 2),
+        "post_rebuild_ratio": round(tracker.ratio, 2),
+        "rebuilds_triggered": rb.epochs_published,
+        "recall_fixed": round(recall_fixed, 4),
+        "recall_rebuilt": round(recall_rebuilt, 4),
+        "mean_probes_fixed": round(probes_fixed, 1),
+        "mean_probes_rebuilt": round(probes_rebuilt, 1),
+        "recall_restored": recall_rebuilt > recall_fixed,
+    }
+
+
+# ---------------------------------------------------------------------------
 
 def run_chaos(index, docs: np.ndarray, queries: np.ndarray,
               exact_ids: np.ndarray, cfg: ChaosConfig, workdir: str, *,
               k: int = 10, n_probe: int = 16,
               deadlines_ms: Optional[List[float]] = None) -> Dict:
-    """All three drills; the returned dict is the
+    """All four drills; the returned dict is the
     ``BENCH_resilience.json`` payload."""
     deadlines_ms = deadlines_ms or [2.0, 5.0, 10.0, 25.0]
     t0 = time.monotonic()
@@ -308,6 +571,8 @@ def run_chaos(index, docs: np.ndarray, queries: np.ndarray,
                                              n_probe=n_probe),
         "shard_faults": run_shard_drill(index, queries, exact_ids, cfg,
                                         k=k, n_probe=n_probe),
+        "rebuild": run_rebuild_drill(index, docs, queries, cfg, workdir,
+                                     k=k, n_probe=n_probe),
     }
     out["wall_s"] = round(time.monotonic() - t0, 1)
     return out

@@ -19,11 +19,30 @@ import numpy as np
 
 @dataclass(frozen=True)
 class RetryPolicy:
-    """Exponential backoff schedule for shard probe retries."""
+    """Backoff schedule for shard probe retries.
+
+    ``jitter="none"`` (default) keeps the classic deterministic
+    exponential schedule.  ``jitter="decorrelated"`` switches
+    :meth:`next_backoff` to decorrelated jitter — each sleep is drawn
+    uniformly from ``[base_ms, 3 * previous_sleep]`` (capped at
+    ``max_ms``) — which de-synchronises retry storms: when a shard
+    fault hits many queries at once, deterministic backoff re-dispatches
+    them all on the same beat, re-spiking the shard, while decorrelated
+    draws spread the herd across the window.
+
+    ``budget_ms`` is a PER-QUERY cap on *total* backoff sleep across
+    all shards: once a query has burned its budget waiting, a faulting
+    shard is skipped immediately (lost clusters accounted, rung
+    "budget") instead of waiting out more retries — total stall is
+    bounded even when every shard is sick.  ``inf`` (default) keeps
+    pre-budget behavior.
+    """
     max_retries: int = 3         # attempts = max_retries + 1
     base_ms: float = 1.0
     multiplier: float = 2.0
     max_ms: float = 1000.0
+    jitter: str = "none"         # "none" | "decorrelated"
+    budget_ms: float = float("inf")
 
     def __post_init__(self):
         if self.max_retries < 0 or self.base_ms < 0 \
@@ -31,11 +50,40 @@ class RetryPolicy:
             raise ValueError(
                 f"invalid RetryPolicy(max_retries={self.max_retries}, "
                 f"base_ms={self.base_ms}, multiplier={self.multiplier})")
+        if self.jitter not in ("none", "decorrelated"):
+            raise ValueError(
+                f"jitter must be 'none' or 'decorrelated', got "
+                f"{self.jitter!r}")
+        if self.budget_ms <= 0:
+            raise ValueError(
+                f"budget_ms must be positive (use inf for unbounded), "
+                f"got {self.budget_ms}")
 
     def backoff_ms(self, attempt: int) -> float:
-        """Backoff before retry ``attempt`` (0-based first retry)."""
+        """Deterministic backoff before retry ``attempt`` (0-based
+        first retry) — the ``jitter="none"`` schedule."""
         return min(self.base_ms * self.multiplier ** attempt,
                    self.max_ms)
+
+    def next_backoff(self, attempt: int, prev_ms: float,
+                     rng: Optional[np.random.Generator] = None) -> float:
+        """Backoff before retry ``attempt`` given the previous sleep.
+
+        With ``jitter="none"`` this is exactly :meth:`backoff_ms`
+        (``prev_ms``/``rng`` ignored), so existing deterministic
+        callers and tests are unchanged.  With
+        ``jitter="decorrelated"`` it draws uniform
+        ``[base_ms, 3 * prev_ms]`` (AWS decorrelated jitter), seeded
+        by the caller's ``rng``; ``prev_ms <= 0`` (first retry) starts
+        the chain at ``base_ms``.
+        """
+        if self.jitter == "none":
+            return self.backoff_ms(attempt)
+        if rng is None:
+            rng = np.random.default_rng(0)
+        lo = self.base_ms
+        hi = max(lo, 3.0 * (prev_ms if prev_ms > 0 else lo))
+        return min(float(rng.uniform(lo, hi)), self.max_ms)
 
 
 @dataclass

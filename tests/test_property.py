@@ -117,17 +117,21 @@ def _tiny_live_substrate(seed):
 
 
 @settings(max_examples=10, deadline=None)
-@given(st.lists(st.sampled_from(["add", "delete", "merge"]),
+@given(st.lists(st.sampled_from(["add", "delete", "merge", "rebuild"]),
                 min_size=1, max_size=8),
        st.integers(0, 2 ** 31 - 1))
 def test_live_mutations_preserve_rebuild_equivalence(script, seed):
-    """Any interleaving of add/delete/merge_delta keeps the live
-    overlay bit-identical to a fresh re-layout of the net corpus."""
+    """Any interleaving of add/delete/merge_delta/epoch-rebuild keeps
+    the live overlay bit-identical to a fresh re-layout of the net
+    corpus under the CURRENT centroids, on the per-probe AND fused
+    kernel paths."""
     from repro.core import policies, search
-    from repro.index import LiveIndex
+    from repro.index import LiveIndex, Rebuilder
     docs, index = _tiny_live_substrate(seed)
     rng = np.random.default_rng(seed)
-    live = LiveIndex(index, delta_cap=128)
+    live = LiveIndex(index, delta_cap=256)
+    epoch0 = live.epoch
+    rebuilds = 0
     for op in script:
         if op == "add" and len(live.delta) < 100:
             m = int(rng.integers(1, 9))
@@ -143,15 +147,27 @@ def test_live_mutations_preserve_rebuild_equivalence(script, seed):
                                        min(4, len(pool)), replace=False))
         elif op == "merge":
             live.merge_delta()
+        elif op == "rebuild":
+            # in-memory re-clustering: writes are quiesced across the
+            # synchronous run_once, so no WAL is needed
+            rb = Rebuilder(live, n_iters=2)
+            rb.run_once("property")
+            live = rb.live
+            rebuilds += 1
+    assert live.epoch == epoch0 + rebuilds
     queries = jnp.asarray(
         rng.normal(size=(8, 8)).astype(np.float32))
     pol = policies.patience(6, delta=2, phi=80.0, k=5, tau=3)
-    a = live.search(queries, pol)
-    b = search(live.rebuild_equivalent(), queries, pol)
-    np.testing.assert_array_equal(np.asarray(a.topk_ids),
-                                  np.asarray(b.topk_ids))
-    np.testing.assert_array_equal(np.asarray(a.probes),
-                                  np.asarray(b.probes))
+    equivalent = live.rebuild_equivalent()
+    for kw in ({}, {"use_fused_kernel": True, "chunk": 4}):
+        a = live.search(queries, pol, **kw)
+        b = search(equivalent, queries, pol, **kw)
+        np.testing.assert_array_equal(np.asarray(a.topk_ids),
+                                      np.asarray(b.topk_ids))
+        np.testing.assert_array_equal(np.asarray(a.probes),
+                                      np.asarray(b.probes))
+        np.testing.assert_allclose(np.asarray(a.phi_hist),
+                                   np.asarray(b.phi_hist), atol=1e-4)
     # live doc count bookkeeping survives the interleaving
     assert live.n_live == len(live.net_corpus()[1])
 

@@ -1,0 +1,309 @@
+"""Background re-clustering: two-phase rebuild publish, epoch-fenced
+swaps, WAL catch-up, drift trigger, and crash recovery at every
+protocol boundary.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import policies, search
+from repro.core.policies import DegradationLadder
+from repro.core.serving import WaveScheduler
+from repro.index import (DriftTracker, IndexRegistry, LiveIndex,
+                         MutationWAL, RebuildCrash, Rebuilder,
+                         StaleEpochError, version_of)
+from repro.index.rebuild import FAILPOINTS, STAGES
+
+
+@pytest.fixture(scope="module")
+def small(tiny_corpus):
+    from repro.core import build_index
+
+    class C:
+        docs = tiny_corpus.docs[:2000]
+        queries = tiny_corpus.queries[:32]
+        queries_long = tiny_corpus.queries[:96]
+    C.index = build_index(C.docs, 16, list_pad=256, n_iters=3, seed=0)
+    return C
+
+
+def _results(live, queries, **kw):
+    pol = policies.patience(16, delta=2, phi=90.0, k=10, tau=3)
+    r = live.search(jnp.asarray(queries), pol, **kw)
+    return (np.asarray(r.topk_ids), np.asarray(r.probes),
+            np.asarray(r.phi_hist))
+
+
+def _assert_same(a_live, b_live, queries):
+    for kw in ({}, {"use_fused_kernel": True, "chunk": 4}):
+        got = _results(a_live, queries, **kw)
+        want = _results(b_live, queries, **kw)
+        np.testing.assert_array_equal(got[0], want[0])
+        np.testing.assert_array_equal(got[1], want[1])
+        np.testing.assert_allclose(got[2], want[2], atol=1e-4)
+
+
+def _mutate(live, rng, docs, added, n=6):
+    vecs = (docs[rng.integers(0, len(docs), n)]
+            + rng.normal(scale=0.05, size=(n, docs.shape[1]))
+            ).astype(np.float32)
+    added.extend(int(i) for i in live.add(vecs))
+    live.delete([added.pop()])
+
+
+def _wal_setup(small, tmp_path, tag):
+    wdir = tmp_path / tag
+    wdir.mkdir()
+    wal = MutationWAL(str(wdir / "wal.log"))
+    live = LiveIndex(small.index, delta_cap=512, wal=wal)
+    mgr = CheckpointManager(str(wdir / "snaps"), async_save=False)
+    reg = IndexRegistry(version_of(live))
+    reg.save(mgr)
+    wal.note_durable(live.seq)
+    return wal, live, mgr, reg
+
+
+# -- pipeline ---------------------------------------------------------------
+
+def test_in_memory_rebuild_bumps_epoch_and_stays_equivalent(small):
+    """A synchronous in-memory rebuild re-clusters the net corpus,
+    bumps the epoch, loses no documents, and the published overlay
+    stays bit-identical to a from-scratch layout of its own corpus."""
+    rng = np.random.default_rng(0)
+    live = LiveIndex(small.index, delta_cap=512)
+    added = []
+    for _ in range(3):
+        _mutate(live, rng, small.docs, added)
+    live.merge_delta()
+    _mutate(live, rng, small.docs, added)
+    before_ids = set(int(i) for i in live.net_corpus()[1])
+
+    rb = Rebuilder(live, n_iters=2)
+    rep = rb.run_once("test")
+    new = rb.live
+    assert rep is not None and rep.epoch == 1 and new.epoch == 1
+    assert rep.corpus == len(before_ids)
+    assert rep.reason == "test"
+    assert rb.epochs_published == 1 and not rb.active
+    assert set(int(i) for i in new.net_corpus()[1]) == before_ids
+    _assert_same(new, _Static(new), small.queries)
+
+
+class _Static:
+    """Adapter: search a LiveIndex's from-scratch re-layout."""
+
+    def __init__(self, live):
+        self._idx = live.rebuild_equivalent()
+
+    def search(self, q, pol, **kw):
+        return search(self._idx, q, pol, **kw)
+
+
+def test_rebuild_catches_up_mutations_between_stages(small, tmp_path):
+    """Mutations that land between pipeline stages are WAL-replayed
+    onto the candidate; the publish compacts the log and the promoted
+    snapshot restores to the exact serving state."""
+    wal, live, mgr, reg = _wal_setup(small, tmp_path, "catchup")
+    rng = np.random.default_rng(1)
+    added = []
+    _mutate(live, rng, small.docs, added)
+    reg.publish(version_of(live))
+
+    rb = Rebuilder(live, reg, mgr, n_iters=2)
+    assert rb.request("drill") and not rb.request("dup")
+    stages = []
+    while rb.active:
+        stage = rb.tick()
+        stages.append(stage)
+        if stage in ("begin", "catchup"):
+            _mutate(live, rng, small.docs, added)
+            reg.publish(version_of(live))
+    assert stages == list(STAGES)
+    rep = rb.last_report
+    assert rep.caught_up >= 4                  # two add+delete pairs
+    assert reg.current().epoch == 1
+    assert rep.step in mgr.all_steps()
+    assert wal.scan() == []                    # compacted past cand.seq
+    # no lost mutations: the candidate serves exactly the ids the
+    # (fully caught-up) old handle knows about
+    assert set(int(i) for i in rb.live.net_corpus()[1]) \
+        == set(int(i) for i in live.net_corpus()[1])
+    # durable roundtrip: recover == the published candidate
+    _, recovered, _ = IndexRegistry.recover(mgr, wal)
+    assert recovered.epoch == 1
+    _assert_same(recovered, rb.live, small.queries)
+    wal.close()
+
+
+# -- crash boundaries -------------------------------------------------------
+
+@pytest.mark.parametrize("fp", FAILPOINTS)
+def test_crash_at_every_rebuild_boundary_recovers(small, tmp_path, fp):
+    """Recovery after a crash at any two-phase-publish boundary is
+    bit-identical: pre-COMMIT crashes land on the no-rebuild state,
+    post-COMMIT crashes land on the rebuilt state, and a second
+    recovery agrees with the first (idempotence)."""
+
+    def drive(tag, failpoint):
+        wal, live, mgr, reg = _wal_setup(small, tmp_path, tag)
+        rng = np.random.default_rng(2)
+        added = []
+        _mutate(live, rng, small.docs, added)
+        rb = Rebuilder(live, reg, mgr, n_iters=2, failpoint=failpoint)
+        rb.request("crash-test")
+        try:
+            while rb.active:
+                if rb.tick() == "begin":
+                    _mutate(live, rng, small.docs, added)
+        except RebuildCrash:
+            pass
+        return wal, live, mgr, rb
+
+    wal, live, mgr, rb = drive(f"crash_{fp}", fp)
+    _, recovered, rep = IndexRegistry.recover(mgr, wal)
+    committed = recovered.epoch > 0
+    assert committed == (fp in ("commit", "promote"))
+    if committed:
+        _, _, _, orb = drive(f"oracle_{fp}", None)
+        oracle = orb.live
+    else:
+        assert rep.rebuild_aborted
+        oracle = live            # only the Rebuilder crashed
+    _assert_same(recovered, oracle, small.queries)
+    # idempotence: recovering again lands on the same state
+    _, again, _ = IndexRegistry.recover(mgr, wal)
+    assert again.epoch == recovered.epoch
+    _assert_same(again, recovered, small.queries)
+    wal.close()
+
+
+# -- epoch fencing ----------------------------------------------------------
+
+def test_stale_epoch_publish_is_fenced(small):
+    live = LiveIndex(small.index, delta_cap=512)
+    reg = IndexRegistry(version_of(live))
+    rb = Rebuilder(live, reg, n_iters=2)
+    rb.run_once("fence-test")
+    assert reg.current().epoch == 1
+    with pytest.raises(StaleEpochError):
+        reg.publish(version_of(live))          # stale epoch-0 handle
+    assert reg.current().epoch == 1            # no clobber
+    # same-epoch publishes (incl. the version-bump path) keep working
+    # and carry the epoch through
+    new = rb.live
+    new.add(small.docs[:4])
+    v1 = reg.publish(version_of(new))
+    v2 = reg.publish(version_of(new))          # same version: bumped
+    assert v2.epoch == v1.epoch == 1
+    assert v2.version > v1.version
+
+
+def test_rebuild_without_manager_closes_epoch_on_log(small, tmp_path):
+    """With a WAL but no snapshot manager the rebuild cannot be made
+    durable: the epoch is closed with an ABORT record so recovery
+    lands on pre-rebuild centroids + full replay — consistent, no
+    lost mutations, just not re-clustered."""
+    wal = MutationWAL(str(tmp_path / "nomgr.log"))
+    live = LiveIndex(small.index, delta_cap=512, wal=wal)
+    rng = np.random.default_rng(3)
+    added = []
+    _mutate(live, rng, small.docs, added)
+    rb = Rebuilder(live, n_iters=2)
+    rb.run_once("no-mgr")
+    assert rb.live.epoch == 1                  # in-memory swap happened
+    assert wal.open_epoch_fences() == []       # ...but the log is closed
+    mgr = CheckpointManager(str(tmp_path / "nomgr_snaps"),
+                            async_save=False)
+    IndexRegistry(version_of(LiveIndex(small.index, delta_cap=512))
+                  ).save(mgr)
+    _, recovered, rep = IndexRegistry.recover(mgr, wal)
+    assert recovered.epoch == 0
+    assert rep.applied >= 2                    # every mutation replayed
+    assert set(int(i) for i in recovered.net_corpus()[1]) \
+        == set(int(i) for i in rb.live.net_corpus()[1])
+    wal.close()
+
+
+# -- drift trigger ----------------------------------------------------------
+
+def test_drift_tracker_triggers_and_rebases():
+    rng = np.random.default_rng(4)
+    cents = rng.normal(size=(8, 16)).astype(np.float32)
+    near = (cents[rng.integers(0, 8, 256)]
+            + rng.normal(scale=0.05, size=(256, 16))).astype(np.float32)
+    tr = DriftTracker(cents, near, ema=0.5, threshold=1.5)
+    assert tr.observe(near[:64]) == pytest.approx(1.0, rel=0.5)
+    assert not tr.triggered
+    far = (near[:64] + 10.0).astype(np.float32)
+    for _ in range(4):
+        tr.observe(far)
+    assert tr.ratio > 1.5 and tr.triggered
+    tr.rebase(cents + 10.0)                    # rebuilt onto the drift
+    assert tr.ratio == 0.0 and not tr.triggered
+    with pytest.raises(ValueError):
+        DriftTracker(cents, ema=1.0)
+
+
+def test_empty_corpus_rebuild_is_safe():
+    """Re-clustering an index whose docs were all deleted must not
+    divide by zero; centroids are kept as-is."""
+    rng = np.random.default_rng(5)
+    docs = rng.normal(size=(256, 8)).astype(np.float32)
+    from repro.core import build_index
+    idx = build_index(docs, 4, list_pad=128, n_iters=2, seed=0)
+    live = LiveIndex(idx, delta_cap=128)
+    live.delete(np.arange(256))
+    rb = Rebuilder(live, n_iters=2)
+    rep = rb.run_once("empty")
+    assert rep.corpus == 0 and rb.live.epoch == 1
+    np.testing.assert_allclose(np.asarray(rb.live._centroids),
+                               np.asarray(live._centroids))
+
+
+# -- serving-loop integration -----------------------------------------------
+
+def test_scheduler_drains_lanes_before_epoch_swap(small, tmp_path):
+    """A rebuild published mid-stream is adopted only after in-flight
+    lanes drain (their probe order is invalid under new centroids);
+    every query is still answered and the swap is counted."""
+    wal, live, mgr, reg = _wal_setup(small, tmp_path, "sched")
+    rng = np.random.default_rng(6)
+    added = []
+    handle = {"live": live}                    # on_publish rebinds it:
+    # publishing from the pre-rebuild handle would be epoch-fenced
+
+    def on_publish(new_live, report):
+        handle["live"] = new_live
+
+    rb = Rebuilder(live, reg, mgr, n_iters=2, on_publish=on_publish)
+    ws = WaveScheduler(small.index, wave_size=8, chunk=4, k=10,
+                       n_probe=16, delta=2, phi=90.0, registry=reg,
+                       rebuilder=rb)
+
+    def on_wave(wave):
+        _mutate(handle["live"], rng, small.docs, added)
+        reg.publish(version_of(handle["live"]))
+        if wave == 1:
+            rb.request("mid-stream")
+
+    rep = ws.serve(small.queries_long, compact=True, on_wave=on_wave)
+    assert len(rep.results) == len(small.queries_long)
+    assert rb.epochs_published == 1
+    assert rep.epoch_swaps == 1
+    assert rep.rebuild_ticks >= len(STAGES)
+    assert reg.current().epoch == 1
+    wal.close()
+
+
+def test_ladder_throttles_rebuild_under_deadline_pressure():
+    lad = DegradationLadder(rebuild_pause_at=4.0)
+    # no active lanes -> never throttle
+    assert not lad.throttle_rebuild(np.array([]), 1.0)
+    # comfortable budgets -> rebuild proceeds
+    assert not lad.throttle_rebuild(np.array([10.0, 8.0]), 1.0)
+    # ANY lane close to its deadline pauses background work
+    assert lad.throttle_rebuild(np.array([10.0, 3.0]), 1.0)
+    # thresholds scale with the wave cost estimate
+    assert lad.throttle_rebuild(np.array([10.0, 8.0]), 4.0)

@@ -196,6 +196,88 @@ def test_shard_retry_dead_shard_skipped(tiny_index, tiny_corpus):
     assert (ids >= 0).all(), "surviving shards must still fill top-k"
 
 
+def test_retry_decorrelated_jitter_bounded_and_spread():
+    """Decorrelated draws stay in [base, min(3*prev, max)] and two rng
+    streams de-synchronise; jitter='none' is the classic schedule."""
+    rp = RetryPolicy(max_retries=4, base_ms=1.0, max_ms=8.0,
+                     jitter="decorrelated")
+    rng = np.random.default_rng(7)
+    prev = 0.0
+    draws = []
+    for attempt in range(5):
+        ms = rp.next_backoff(attempt, prev, rng)
+        lo, hi = 1.0, min(max(1.0, 3.0 * (prev or 1.0)), 8.0)
+        assert lo <= ms <= hi
+        draws.append(ms)
+        prev = ms
+    other = []
+    rng2 = np.random.default_rng(8)
+    prev = 0.0
+    for attempt in range(5):
+        ms = rp.next_backoff(attempt, prev, rng2)
+        other.append(ms)
+        prev = ms
+    assert draws != other                 # herds spread apart
+    none = RetryPolicy(max_retries=4, base_ms=1.0, multiplier=2.0)
+    assert [none.next_backoff(a, 99.0) for a in range(3)] \
+        == [none.backoff_ms(a) for a in range(3)]
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter="gaussian")
+    with pytest.raises(ValueError):
+        RetryPolicy(budget_ms=0.0)
+
+
+def test_retry_budget_exhaustion_degrades_to_skip(tiny_index,
+                                                  tiny_corpus):
+    """Once the per-query backoff budget is burned, faulting shards are
+    skipped immediately (no further sleeps) and accounted — the query
+    still gets an answer from the surviving shards."""
+    queries = tiny_corpus.queries[:16]
+    sh = shard_index(tiny_index, 4)
+
+    def all_dead(shard, attempt):
+        raise ShardFault(f"shard {shard} is gone")
+
+    slept = []
+    _, ids, rep = search_with_retry(
+        sh, queries, k=10, n_probe=16,
+        retry=RetryPolicy(max_retries=3, base_ms=4.0, multiplier=2.0,
+                          budget_ms=10.0),
+        fault=all_dead, sleep=slept.append)
+    assert rep.budget_exhausted
+    assert rep.budget_skips > 0
+    # total sleep is clamped to exactly the budget, never beyond
+    assert sum(slept) == pytest.approx(10.0)
+    assert rep.backoff_ms == pytest.approx(10.0)
+    # every shard was still attempted once (first try is free) and
+    # ends up skipped with its clusters accounted
+    assert rep.skipped_shards == [0, 1, 2, 3]
+    assert np.asarray(ids).shape == (16, 10)
+
+
+def test_retry_budget_not_hit_when_healthy(tiny_index, tiny_corpus):
+    """A finite budget is inert when shards are healthy or recover
+    within it: same results, no budget accounting."""
+    queries = tiny_corpus.queries[:16]
+    sh = shard_index(tiny_index, 4)
+    _, ids_clean, _ = search_with_retry(sh, queries, k=10, n_probe=16)
+    fails = {"left": 1}
+
+    def flaky(shard, attempt):
+        if shard == 2 and fails["left"] > 0:
+            fails["left"] -= 1
+            raise ShardFault("one blip")
+
+    _, ids, rep = search_with_retry(
+        sh, queries, k=10, n_probe=16,
+        retry=RetryPolicy(max_retries=3, base_ms=1.0, budget_ms=50.0),
+        fault=flaky, sleep=lambda ms: None)
+    assert not rep.budget_exhausted and rep.budget_skips == 0
+    assert rep.budget_ms == 50.0
+    np.testing.assert_array_equal(np.asarray(ids),
+                                  np.asarray(ids_clean))
+
+
 # -- chaos harness ----------------------------------------------------------
 
 def test_chaos_monkey_deterministic():

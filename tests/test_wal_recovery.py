@@ -290,6 +290,82 @@ def test_group_commit_scan_sees_pending_records(small, tmp_path):
     wal.close()
 
 
+# -- truncate guard: compaction can never outrun durability -----------------
+
+def test_truncate_clamped_to_durable_snapshot(small, tmp_path):
+    """truncate_upto is clamped to the last seq covered by a durable
+    snapshot (note_durable): an over-eager compactor asking to cut the
+    whole log keeps every record the snapshot does not cover."""
+    ops = _script(small)
+    wal = MutationWAL(str(tmp_path / "wal.log"))
+    live = LiveIndex(small.index, delta_cap=256, wal=wal)
+    mgr = CheckpointManager(str(tmp_path / "snaps"), async_save=False)
+    added = []
+    for op, payload in ops[:4]:
+        _apply(live, op, payload, added)
+    IndexRegistry(version_of(live)).save(mgr)
+    wal.note_durable(live.seq)                # snapshot covers seq<=4
+    durable_seq = live.seq
+    for op, payload in ops[4:]:
+        _apply(live, op, payload, added)
+    # BUG SCENARIO: compactor asks to drop everything up to the tip
+    kept = wal.truncate_upto(live.seq)
+    assert kept == live.seq - durable_seq     # tail survived the cut
+    assert [r.seq for r in wal.scan()] \
+        == list(range(durable_seq + 1, live.seq + 1))
+    # recovery is whole: snapshot + surviving tail == live state
+    _, recovered, rep = IndexRegistry.recover(mgr, wal)
+    assert rep.applied == live.seq - durable_seq
+    np.testing.assert_array_equal(_results(recovered, small.queries)[0],
+                                  _results(live, small.queries)[0])
+    wal.close()
+
+
+def test_truncate_respects_open_epoch_fence(small, tmp_path):
+    """An interleaved compact-during-recovery sequence: compaction
+    runs while a rebuild epoch is still open.  The cut is clamped to
+    the fence seq and the fence records themselves survive, so a
+    crash right after the compaction still aborts the epoch and
+    replays every mutation; once the epoch closes, its fences (and
+    the covered records) compact away."""
+    from repro.index import Rebuilder
+    from repro.index.wal import EPOCH_OPS
+    ops = _script(small)
+    wal = MutationWAL(str(tmp_path / "wal.log"))
+    live = LiveIndex(small.index, delta_cap=256, wal=wal)
+    mgr = CheckpointManager(str(tmp_path / "snaps"), async_save=False)
+    IndexRegistry(version_of(live)).save(mgr)
+    wal.note_durable(live.seq)
+    added = []
+    for op, payload in ops[:4]:
+        _apply(live, op, payload, added)
+    rb = Rebuilder(live, n_iters=2)           # no manager: stays open
+    rb.request("compact-race")
+    rb.tick()                                 # begin: fence at seq=4
+    fence_seq = live.seq
+    for op, payload in ops[4:]:
+        _apply(live, op, payload, added)
+    # snapshot up to the tip, then compact — mid-rebuild
+    IndexRegistry(version_of(live)).save(mgr)
+    wal.note_durable(live.seq)
+    wal.truncate_upto(live.seq)
+    recs = wal.scan()
+    # everything after the fence survives, plus the fence itself
+    assert [r.seq for r in recs if r.op not in EPOCH_OPS] \
+        == list(range(fence_seq + 1, live.seq + 1))
+    assert wal.open_epoch_fences(recs) == [fence_seq]
+    # crash now: recovery aborts the open epoch and loses nothing
+    _, recovered, rep = IndexRegistry.recover(mgr, wal)
+    assert rep.rebuild_aborted
+    np.testing.assert_array_equal(_results(recovered, small.queries)[0],
+                                  _results(live, small.queries)[0])
+    # the abort closed the epoch: compaction may now drop the fences
+    wal.note_durable(live.seq)
+    assert wal.truncate_upto(live.seq) == 0
+    assert wal.scan() == []
+    wal.close()
+
+
 # -- satellite: actionable checkpoint errors --------------------------------
 
 def test_missing_index_json_actionable(tmp_path):
